@@ -1,0 +1,75 @@
+"""Paper Figures 9-12: end-to-end latency & throughput, OServe vs baselines.
+
+One row per (model x chips x trace x policy): P99/avg latency, throughput,
+drops, switch count.  `--chips 32` reproduces the 32-GPU scaling study
+(Fig. 12); per-span P1-P6 slices reproduce Fig. 9.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Bench
+from repro.serving.baselines import (DynamoPolicy, LlumnixPolicy,
+                                     OServePolicy, RoundRobinPolicy,
+                                     VLLMReloadPolicy, VLLMStaticPolicy)
+
+
+def policies(bench: Bench) -> dict:
+    cm, cl, arch, avg = (bench.cm, bench.cluster, bench.archetypes,
+                         bench.avg_rates)
+    return {
+        "oserve": lambda: OServePolicy(cm, cl, arch),
+        "vllm-static": lambda: VLLMStaticPolicy(cm, cl, arch, avg),
+        "vllm-reload": lambda: VLLMReloadPolicy(cm, cl, arch),
+        "llumnix": lambda: LlumnixPolicy(cm, cl, arch, avg),
+        "round-robin": lambda: RoundRobinPolicy(cm, cl, arch, avg),
+        "dynamo": lambda: DynamoPolicy(cm, cl, arch, avg),
+    }
+
+
+def run(model: str = "opt-30b", chips: int = 16, trace_id: int = 1,
+        n_spans: int = 40, spans_detail: bool = False,
+        hw: str = "h100") -> list[str]:
+    bench = Bench(model=model, chips=chips, n_spans=n_spans,
+                  trace_id=trace_id, hw=hw)
+    rows = []
+    base = {}
+    for name, mk in policies(bench).items():
+        res, m = bench.run(mk())
+        base[name] = m
+        rows.append(
+            f"e2e/{model}/{chips}c/{hw}/t{trace_id}/{name},"
+            f"{m['sim_seconds']*1e6:.0f},"
+            f"p99={m.get('p99', float('inf')):.1f}s"
+            f";avg={m.get('avg_latency', float('inf')):.1f}s"
+            f";thr={m['throughput_rps']:.2f}rps"
+            f";drop={m['dropped']};switch={res.switch_spans}")
+        if spans_detail and name in ("oserve", "vllm-static"):
+            picks = np.linspace(1, bench.n_spans - 1, 6).astype(int)  # P1-P6
+            for pi, s in enumerate(picks):
+                sm = res.span_metrics(int(s))
+                rows.append(f"e2e/{model}/{chips}c/t{trace_id}/{name}/P{pi+1},"
+                            f"0,p99={sm['p99']:.1f}s;n={sm['n']}")
+    if "oserve" in base and "vllm-static" in base:
+        o, v = base["oserve"], base["vllm-static"]
+        gain_p99 = v.get("p99", 1) / max(o.get("p99", 1e-9), 1e-9)
+        gain_thr = o["throughput_rps"] / max(v["throughput_rps"], 1e-9)
+        rows.append(f"e2e/{model}/{chips}c/t{trace_id}/gain,0,"
+                    f"p99_x={gain_p99:.2f};thr_x={gain_thr:.2f}")
+    return rows
+
+
+def main(fast: bool = True) -> list[str]:
+    rows = []
+    combos = ([("opt-30b", 16, 1), ("opt-30b", 16, 2)] if fast else
+              [("opt-30b", 16, 1), ("opt-30b", 16, 2),
+               ("opt-66b", 16, 1), ("llama2-70b", 16, 1),
+               ("llama2-70b", 32, 1), ("llama-30b", 8, 2)])
+    for model, chips, trace in combos:
+        rows.extend(run(model, chips, trace, spans_detail=True))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main(fast=False):
+        print(r)

@@ -1,0 +1,87 @@
+"""§Roofline: three-term roofline per (arch x shape) from the dry-run JSONs.
+
+  compute    = HLO_FLOPs / (chips * peak)        [197 TFLOP/s bf16 / chip]
+  memory     = HLO_bytes / (chips * hbm_bw)      [819 GB/s / chip]
+  collective = collective_bytes / (chips * link) [~50 GB/s ICI / link]
+
+cost_analysis / the HLO module are per-device after SPMD partitioning, so the
+per-device quantities divide by one chip's rates directly.  MODEL_FLOPS uses
+6*N_active*D (train) or 2*N_active*D (serve) per the assignment.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.launch.shapes import SHAPES, applicable
+
+PEAK = 197e12
+HBM = 819e9
+ICI = 50e9
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    sh = SHAPES[shape_name]
+    n_active = cfg.profile().active_param_count
+    if sh.kind == "train":
+        return 6.0 * n_active * sh.global_batch * sh.seq_len
+    if sh.kind == "prefill":
+        return 2.0 * n_active * sh.global_batch * sh.seq_len
+    return 2.0 * n_active * sh.global_batch          # decode: 1 token/seq
+
+
+def load_cell(dirpath: str, arch: str, shape: str, mesh: str = "single"
+              ) -> dict | None:
+    p = os.path.join(dirpath, f"{arch}_{shape}_{mesh}.json")
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        return json.load(f)
+
+
+def roofline_row(rec: dict) -> dict:
+    chips = rec.get("n_devices", 256)
+    t_c = rec["per_device_flops"] / PEAK
+    t_m = rec["per_device_bytes"] / HBM
+    coll = rec.get("collectives", {}).get("total_bytes", 0)
+    t_x = coll / ICI
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))[1]
+    mf = model_flops(rec["arch"], rec["shape"])
+    hlo_global = rec["per_device_flops"] * chips
+    return dict(arch=rec["arch"], shape=rec["shape"],
+                compute_s=t_c, memory_s=t_m, collective_s=t_x,
+                bottleneck=dom,
+                model_flops=mf, hlo_flops_global=hlo_global,
+                useful_ratio=mf / hlo_global if hlo_global else 0.0,
+                step_s=max(t_c, t_m, t_x))
+
+
+def main(fast: bool = True, dirpath: str = "experiments/roofline"
+         ) -> list[str]:
+    rows = []
+    for arch in ASSIGNED_ARCHS:
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            ok, _ = applicable(cfg, SHAPES[shape])
+            if not ok:
+                continue
+            rec = load_cell(dirpath, arch, shape)
+            if rec is None or not rec.get("ok"):
+                rows.append(f"roofline/{arch}/{shape},0,pending")
+                continue
+            r = roofline_row(rec)
+            rows.append(
+                f"roofline/{arch}/{shape},{r['step_s']*1e6:.0f},"
+                f"compute={r['compute_s']*1e3:.2f}ms"
+                f";memory={r['memory_s']*1e3:.2f}ms"
+                f";collective={r['collective_s']*1e3:.2f}ms"
+                f";bound={r['bottleneck']}"
+                f";useful={100*r['useful_ratio']:.0f}%")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(r)

@@ -1,0 +1,49 @@
+"""Benchmark registry: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  ``--full`` runs the slow
+variants (all models/cluster sizes); default keeps CI-friendly settings.
+
+  bench_e2e        Fig 9-12   end-to-end latency/throughput vs baselines
+  bench_switching  Fig 13     ad hoc switching vs naive reload
+  bench_predictor  Fig 6/S5.3 per-type LSTM vs MA vs aggregate
+  bench_scheduler  Fig 15     heuristic vs exhaustive search
+  bench_ablation   Fig 14/AppD heterogeneous deployment + flow assignment
+  bench_roofline   SRoofline  three-term roofline per (arch x shape)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+MODULES = ["bench_predictor", "bench_scheduler", "bench_ablation",
+           "bench_switching", "bench_e2e", "bench_roofline"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", choices=MODULES, default=None)
+    args = ap.parse_args()
+    mods = [args.only] if args.only else MODULES
+    print("name,us_per_call,derived")
+    failures = []
+    for name in mods:
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["main"])
+            rows = mod.main(fast=not args.full)
+            for row in rows:
+                print(row, flush=True)
+            print(f"{name}/_total,{(time.time()-t0)*1e6:.0f},ok", flush=True)
+        except Exception as e:  # keep the suite going
+            failures.append((name, repr(e)))
+            print(f"{name}/_total,{(time.time()-t0)*1e6:.0f},ERROR:{e!r}",
+                  flush=True)
+    if failures:
+        print(f"# {len(failures)} benchmark module(s) failed", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

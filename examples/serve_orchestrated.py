@@ -1,0 +1,72 @@
+"""OServe end-to-end: predictor -> scheduler -> switch planner -> cluster.
+
+Drives the full control loop over a fluctuating trace at paper scale (via the
+calibrated discrete-event cluster) and prints per-span decisions: predicted
+rates, chosen heterogeneous deployment, workload assignment, and switch cost
+(ad hoc vs naive reload).
+
+    PYTHONPATH=src python examples/serve_orchestrated.py [--spans 12]
+"""
+import argparse
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.costmodel import CostModel
+from repro.core.orchestrator import Orchestrator
+from repro.core.predictor import LSTMWorkloadPredictor, WorkloadClusterer, count_series
+from repro.core.types import ClusterSpec, H100_SPEC, WorkloadType
+from repro.serving.request import span_of, synthesize_trace
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--spans", type=int, default=12)
+    ap.add_argument("--chips", type=int, default=16)
+    ap.add_argument("--model", default="opt-30b")
+    args = ap.parse_args()
+
+    cfg = get_config(args.model)
+    cm = CostModel(cfg.profile(), hw=H100_SPEC)
+    cluster = ClusterSpec(args.chips, hw=H100_SPEC)
+    orch = Orchestrator(cm, cluster)
+
+    reqs = synthesize_trace(args.spans, 800, trace_id=2, seed=0)
+    il = np.array([r.in_len for r in reqs])
+    ol = np.array([r.out_len for r in reqs])
+    clusterer, labels = WorkloadClusterer.fit(il, ol, k=4, seed=0)
+    archetypes = [WorkloadType(int(c[0]), int(c[1]))
+                  for c in clusterer.raw_centroids]
+    counts = count_series(labels, np.array([span_of(r) for r in reqs]),
+                          4, args.spans)
+
+    # small LSTM warm-started on the first spans (window shrunk to fit demo)
+    window = max(2, args.spans // 4)
+    lstm = LSTMWorkloadPredictor(4, window=window, hidden=8, seed=0)
+    lstm.fit(counts[: max(window + 2, args.spans // 2)] + 1.0, epochs=40)
+
+    print(f"{args.model} on {args.chips} x H100 | "
+          f"types: {[(w.in_len, w.out_len) for w in archetypes]}")
+    for s in range(args.spans):
+        pred = (lstm.predict(counts[:s + 1]) if s >= window else counts[s])
+        ws = [a.with_rate(float(r)) for a, r in zip(archetypes, pred)]
+        plan = orch.plan_span(ws)
+        frac = np.array(plan.fractions)
+        dominant = [int(np.argmax(frac[:, j])) if frac[:, j].sum() > 0 else -1
+                    for j in range(4)]
+        switch = (f"switch {plan.switch_seconds:.2f}s "
+                  f"(reload would be {plan.reload_seconds:.0f}s)"
+                  if plan.changed_replicas else "no switch")
+        print(f"span {s:2d} | pred={np.round(pred).astype(int)} | "
+              f"{plan.deployment} | type->replica {dominant} | {switch} | "
+              f"search {plan.search_time:.2f}s")
+
+    # fault tolerance: lose 4 chips, re-plan on survivors
+    ws = [a.with_rate(float(r)) for a, r in zip(archetypes, counts[-1])]
+    plan = orch.on_cluster_change(args.chips - 4, ws)
+    print(f"FAILURE of 4 chips -> re-planned {plan.deployment} "
+          f"on {args.chips - 4} chips, switch {plan.switch_seconds:.2f}s")
+
+
+if __name__ == "__main__":
+    main()

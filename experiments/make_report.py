@@ -1,0 +1,117 @@
+"""Generate the data-driven sections of EXPERIMENTS.md from the dry-run /
+roofline / hillclimb JSON artifacts.  Run after campaigns finish:
+
+    PYTHONPATH=src python experiments/make_report.py > experiments/report.md
+"""
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+from benchmarks.bench_roofline import model_flops, roofline_row  # noqa: E402
+from repro.configs import ASSIGNED_ARCHS, get_config              # noqa: E402
+from repro.launch.shapes import SHAPES, applicable                 # noqa: E402
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def dryrun_table():
+    print("### Dry-run matrix (lower + compile on the production meshes)\n")
+    print("| arch | shape | single-pod (16x16) | multi-pod (2x16x16) | plan |")
+    print("|---|---|---|---|---|")
+    n_ok = n_cells = 0
+    for arch in ASSIGNED_ARCHS:
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            ok, why = applicable(cfg, SHAPES[shape])
+            if not ok:
+                print(f"| {arch} | {shape} | skip | skip | "
+                      f"long_500k needs sub-quadratic attention |")
+                continue
+            row = []
+            plan = ""
+            for mesh in ("single", "multi"):
+                p = f"experiments/dryrun/{arch}_{shape}_{mesh}.json"
+                if os.path.exists(p):
+                    d = load(p)
+                    n_cells += 1
+                    if d.get("ok"):
+                        n_ok += 1
+                        mem = d.get("memory", {})
+                        tot = (mem.get("argument_size_in_bytes", 0)
+                               + mem.get("temp_size_in_bytes", 0))
+                        row.append(f"OK {d.get('compile_s', '?')}s, "
+                                   f"{tot/1e9:.1f}GB/dev")
+                        plan = d.get("plan", "")
+                    else:
+                        row.append("FAIL")
+                else:
+                    row.append("pending")
+            print(f"| {arch} | {shape} | {row[0]} | {row[1]} | {plan} |")
+    print(f"\n**{n_ok}/{n_cells} mesh-cells compile OK.**\n")
+
+
+def roofline_table():
+    print("### Roofline (single-pod, unrolled HLO accounting)\n")
+    print("| arch | shape | compute | memory | collective | bound |"
+          " MODEL/HLO flops | next lever |")
+    print("|---|---|---|---|---|---|---|---|")
+    levers = {
+        "collective": "cut the dominant collective (see §Perf)",
+        "memory": "shard/cast the dominant HBM stream",
+        "compute": "raise MXU utilization (larger tiles/fusion)",
+    }
+    for arch in ASSIGNED_ARCHS:
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            ok, _ = applicable(cfg, SHAPES[shape])
+            if not ok:
+                continue
+            p = f"experiments/roofline/{arch}_{shape}_single.json"
+            if not os.path.exists(p):
+                print(f"| {arch} | {shape} | - | - | - | pending | - | - |")
+                continue
+            d = load(p)
+            if not d.get("ok"):
+                print(f"| {arch} | {shape} | - | - | - | FAIL | - | - |")
+                continue
+            r = roofline_row(d)
+            print(f"| {arch} | {shape} "
+                  f"| {r['compute_s']*1e3:.1f}ms "
+                  f"| {r['memory_s']*1e3:.1f}ms "
+                  f"| {r['collective_s']*1e3:.1f}ms "
+                  f"| **{r['bottleneck']}** "
+                  f"| {100*r['useful_ratio']:.0f}% "
+                  f"| {levers[r['bottleneck']]} |")
+    print()
+
+
+def hillclimb_table():
+    print("### Hillclimb variants (raw terms; narrative in §Perf)\n")
+    print("| cell | variant | compute | memory | collective | step | ok |")
+    print("|---|---|---|---|---|---|---|")
+    for p in sorted(glob.glob("experiments/hillclimb/*.json")):
+        d = load(p)
+        name = os.path.basename(p)[:-5]
+        cell, variant = name.split("__")
+        if not d.get("ok"):
+            print(f"| {cell} | {variant} | - | - | - | - |"
+                  f" FAIL: {str(d.get('error'))[:60]} |")
+            continue
+        r = roofline_row(d)
+        print(f"| {cell} | {variant} "
+              f"| {r['compute_s']*1e3:.1f}ms | {r['memory_s']*1e3:.1f}ms "
+              f"| {r['collective_s']*1e3:.1f}ms "
+              f"| {r['step_s']*1e3:.1f}ms | OK |")
+    print()
+
+
+if __name__ == "__main__":
+    dryrun_table()
+    roofline_table()
+    hillclimb_table()

@@ -1,0 +1,151 @@
+"""OServe control loop (paper Appendix A) + failure/elasticity handling.
+
+Per time span:
+  1. the workload predictor forecasts per-type arrival rates for the next span;
+  2. the scheduler (S3) searches the serving strategy — heterogeneous model
+     deployment + max-flow workload assignment — warm-started from the current
+     deployment;
+  3. if the deployment changed, the switch planner (S4.2) computes the ad hoc
+     parameter-transfer plan and its cost (vs. a naive reload).
+
+``on_cluster_change`` implements Appendix C: node failures / elastic resizes
+re-run the same loop with the surviving chip count; EWMA health scaling
+(straggler mitigation) shrinks a degraded replica's capacities so the flow
+re-routes around it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core.assignment import assign_workloads
+from repro.core.costmodel import CostModel
+from repro.core.deployment import flow_guided_search
+from repro.core.switching import (PlacedDeployment, place_deployment,
+                                  plan_switch)
+from repro.core.types import ClusterSpec, Deployment, WorkloadType
+
+
+@dataclasses.dataclass
+class OrchestratorConfig:
+    span_seconds: float = 60.0
+    max_tp: int = 8
+    max_pp: int = 4
+    search_seed: int = 0
+    search_patience: int = 20
+    switch_hysteresis: float = 1.05   # require 5% predicted gain to switch
+    ewma_alpha: float = 0.3
+
+
+@dataclasses.dataclass
+class SpanPlan:
+    deployment: Deployment
+    placed: PlacedDeployment
+    fractions: list[list[float]]
+    throughput: float
+    switch_seconds: float
+    reload_seconds: float
+    changed_replicas: list[int]
+    search_time: float
+
+
+class Orchestrator:
+    def __init__(self, cm: CostModel, cluster: ClusterSpec,
+                 cfg: OrchestratorConfig | None = None):
+        self.cm = cm
+        self.cluster = cluster
+        self.cfg = cfg or OrchestratorConfig()
+        self.current: Deployment | None = None
+        self.placed: PlacedDeployment | None = None
+        self.health: np.ndarray | None = None   # per-replica EWMA in (0, 1]
+
+    # -- health / stragglers ---------------------------------------------------
+
+    def observe_health(self, achieved_fraction: list[float]) -> None:
+        """achieved/(expected) throughput per replica for the last span."""
+        obs = np.clip(np.asarray(achieved_fraction, float), 0.05, 1.0)
+        if self.health is None or len(self.health) != len(obs):
+            self.health = obs
+        else:
+            a = self.cfg.ewma_alpha
+            self.health = (1 - a) * self.health + a * obs
+
+    # -- the per-span decision ---------------------------------------------------
+
+    def plan_span(self, workloads: list[WorkloadType],
+                  force: bool = False) -> SpanPlan:
+        t0 = time.time()
+        search = flow_guided_search(
+            self.cm, self.cluster.chips, workloads,
+            max_tp=self.cfg.max_tp, max_pp=self.cfg.max_pp,
+            patience=self.cfg.search_patience, seed=self.cfg.search_seed,
+            initial=self.current)
+        new_dep, result = search.deployment, search.assignment
+
+        if self.current is not None and not force:
+            scale = None
+            if (self.health is not None
+                    and len(self.health) == self.current.dp):
+                scale = list(self.health)
+            cur_res = assign_workloads(self.cm, self.current, workloads,
+                                       capacity_scale=scale)
+            # Switch only for a clear win: >hysteresis gain in served demand
+            # or in stressed capacity (robust headroom), or the same
+            # throughput at materially lower peak utilization (queueing).
+            stressed = [w.with_rate(w.rate * 2.0) for w in workloads]
+            new_cap = assign_workloads(self.cm, new_dep, stressed,
+                                       balance=False).throughput
+            cur_cap = assign_workloads(self.cm, self.current, stressed,
+                                       balance=False).throughput
+            h = self.cfg.switch_hysteresis
+            thr_gain = result.throughput > h * cur_res.throughput
+            cap_gain = (result.throughput >= 0.999 * cur_res.throughput
+                        and new_cap > h * cur_cap)
+            lat_gain = (result.throughput >= 0.999 * cur_res.throughput
+                        and new_cap >= 0.999 * cur_cap
+                        and result.latency_proxy()
+                        < 0.95 * cur_res.latency_proxy())
+            if not (thr_gain or cap_gain or lat_gain):
+                new_dep, result = self.current, cur_res
+
+        switch_s = 0.0
+        reload_s = self.cm.reload_seconds()
+        changed: list[int] = list(range(new_dep.dp))
+        new_placed = place_deployment(new_dep, self.cluster)
+        if (self.placed is not None and self.current is not None
+                and new_dep.replicas == self.current.replicas):
+            changed = []
+        elif self.placed is not None:
+            plan = plan_switch(self.placed, new_placed, self.cm,
+                               self.cluster.hw)
+            switch_s = plan.estimate_seconds(self.cluster.hw)
+        self.current, self.placed = new_dep, new_placed
+        return SpanPlan(new_dep, new_placed, result.fractions,
+                        result.throughput, switch_s, reload_s, changed,
+                        time.time() - t0)
+
+    # -- fault tolerance / elasticity (Appendix C) -------------------------------
+
+    def on_cluster_change(self, new_chips: int,
+                          workloads: list[WorkloadType]) -> SpanPlan:
+        """Node failure or elastic resize: re-plan on the surviving chips.
+
+        The switch plan sources only from chips present in both clusters, so
+        a shrink never reads from dead devices.
+        """
+        self.cluster = ClusterSpec(new_chips, self.cluster.hw)
+        # keep the old placement for switch-plan sourcing, but search fresh:
+        # the warm-started mutation loop preserves total chips, which no
+        # longer matches the pool
+        if self.placed is not None and new_chips < self.placed.all_chips[-1] + 1:
+            # shrink: drop shards on dead chips from the source set
+            surviving = []
+            for rep in self.placed.replicas:
+                if all(c < new_chips for c in rep.chips):
+                    surviving.append(rep)
+            self.placed = (PlacedDeployment(tuple(surviving))
+                           if surviving else None)
+        self.current = None
+        return self.plan_span(workloads, force=True)

@@ -1,0 +1,203 @@
+"""Flash-decode — batched single-token attention over a (paged) KV cache.
+
+Two variants:
+  * ``flash_decode``       — dense cache [B, S, Hkv, D], grid (B, Hq, n_k)
+    with online-softmax scratch accumulation and per-sequence length masking.
+  * ``flash_decode_paged`` — vLLM-style paged cache: the block table rides in
+    scalar-prefetch SMEM (PrefetchScalarGridSpec) and the K/V index maps
+    dereference it, so pages are fetched HBM->VMEM exactly once, in table
+    order.  This is the TPU-native form of the serving engine's decode path.
+
+Lengths mask invalid tail positions; softcap supports gemma2.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0 ** 30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                   *, scale: float, block_k: int, n_k: int, softcap: float):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)              # [1, D] (token block)
+    k = k_ref[0, 0].astype(jnp.float32)              # [BK, D]
+    v = v_ref[0, 0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    k_pos = j * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(k_pos < len_ref[b], s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_cur = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.exp(s - m_cur)
+    alpha = jnp.exp(m_prev - m_cur)
+    l_scr[...] = l_scr[...] * alpha + p.sum(axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_cur
+
+    @pl.when(j == n_k - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+                       )[0].astype(o_ref.dtype)
+
+
+def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array, lens: jax.Array,
+                 *, softcap: float = 0.0, block_k: int = 128,
+                 scale: float | None = None,
+                 interpret: bool = False) -> jax.Array:
+    """q: [B, Hq, D] one token per sequence; k/v: [B, S, Hkv, D]; lens [B].
+
+    Returns [B, Hq, D].  S % block_k == 0 (ops.py pads).
+    """
+    B, Hq, D = q.shape
+    _, S, Hkv, _ = k.shape
+    group = Hq // Hkv
+    n_k = S // block_k
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+
+    qt = q[:, :, None, :]                         # [B, Hq, 1, D]
+    kt = jnp.swapaxes(k, 1, 2)                    # [B, Hkv, S, D]
+    vt = jnp.swapaxes(v, 1, 2)
+
+    kernel = functools.partial(_decode_kernel, scale=scale, block_k=block_k,
+                               n_k=n_k, softcap=softcap)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, Hq, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, D), lambda b, h, j, lens: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, j, lens: (b, h // group, j, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, j, lens: (b, h // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, D), lambda b, h, j, lens: (b, h, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, D), jnp.float32),
+        ],
+    )
+    # kernel signature with scalar prefetch: (lens, q, k, v, o, scratch...)
+    def kern(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr):
+        kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr)
+
+    def kspec_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, *scratch):
+        kern(len_ref, q_ref, k_ref, v_ref, o_ref, *scratch)
+
+    out = pl.pallas_call(
+        kspec_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hq, D), q.dtype),
+        interpret=interpret,
+    )(lens.astype(jnp.int32), qt, kt, vt)
+    return out
+
+
+def _paged_kernel(lens_ref, table_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *, scale, block, n_blocks, softcap):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # [1, D]
+    k = k_ref[0, 0].astype(jnp.float32)            # [block, D]
+    v = v_ref[0, 0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    pos = j * block + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(pos < lens_ref[b], s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_cur = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.exp(s - m_cur)
+    alpha = jnp.exp(m_prev - m_cur)
+    l_scr[...] = l_scr[...] * alpha + p.sum(axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_cur
+
+    @pl.when(j == n_blocks - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+                       )[0].astype(o_ref.dtype)
+
+
+def flash_decode_paged(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                       block_table: jax.Array, lens: jax.Array,
+                       *, softcap: float = 0.0, scale: float | None = None,
+                       interpret: bool = False) -> jax.Array:
+    """Paged decode attention.
+
+    Args:
+      q: [B, Hq, D]; k_pages/v_pages: [num_pages, page, Hkv, D];
+      block_table: [B, max_pages] int32 physical page per logical page;
+      lens: [B] sequence lengths.
+    Returns [B, Hq, D].
+    """
+    B, Hq, D = q.shape
+    num_pages, page, Hkv, _ = k_pages.shape
+    group = Hq // Hkv
+    max_pages = block_table.shape[1]
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+
+    qt = q[:, :, None, :]
+    kt = jnp.swapaxes(k_pages, 1, 2)               # [pages, Hkv, page, D]
+    vt = jnp.swapaxes(v_pages, 1, 2)
+
+    kernel = functools.partial(_paged_kernel, scale=scale, block=page,
+                               n_blocks=max_pages, softcap=softcap)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                     # lens, block_table
+        grid=(B, Hq, max_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, D),
+                         lambda b, h, j, lens, tbl: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, page, D),
+                         lambda b, h, j, lens, tbl: (tbl[b, j], h // group,
+                                                     0, 0)),
+            pl.BlockSpec((1, 1, page, D),
+                         lambda b, h, j, lens, tbl: (tbl[b, j], h // group,
+                                                     0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, D),
+                               lambda b, h, j, lens, tbl: (b, h, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hq, D), q.dtype),
+        interpret=interpret,
+    )(lens.astype(jnp.int32), block_table.astype(jnp.int32), qt, kt, vt)
+    return out

@@ -1,0 +1,86 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0 ** 30
+
+
+def _expand(k: jax.Array, Hq: int) -> jax.Array:
+    B, S, Hkv, D = k.shape
+    rep = Hq // Hkv
+    if rep == 1:
+        return k
+    return jnp.repeat(k, rep, axis=2)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, softcap=0.0, window=0):
+    """q: [B, Sq, Hq, D]; k/v: [B, Sk, Hkv, D]."""
+    B, Sq, Hq, D = q.shape
+    Sk = k.shape[1]
+    k = _expand(k, Hq)
+    v = _expand(v, Hq)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (D ** 0.5)
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    qp = jnp.arange(Sq)[:, None]
+    kp = jnp.arange(Sk)[None, :]
+    ok = jnp.ones((Sq, Sk), bool)
+    if causal:
+        ok = ok & (kp <= qp)
+    if window > 0:
+        ok = ok & (kp > qp - window)
+    s = jnp.where(ok[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32)
+                      ).astype(q.dtype)
+
+
+def flash_decode_ref(q, k, v, lens, *, softcap=0.0):
+    """q: [B, Hq, D]; k/v: [B, S, Hkv, D]; lens [B]."""
+    B, Hq, D = q.shape
+    S = k.shape[1]
+    k = _expand(k, Hq)
+    v = _expand(v, Hq)
+    s = jnp.einsum("bhd,bkhd->bhk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (D ** 0.5)
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    ok = jnp.arange(S)[None, None, :] < lens[:, None, None]
+    s = jnp.where(ok, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhk,bkhd->bhd", p, v.astype(jnp.float32)
+                      ).astype(q.dtype)
+
+
+def flash_decode_paged_ref(q, k_pages, v_pages, block_table, lens, *,
+                           softcap=0.0):
+    """Gather pages into a dense cache, then dense decode."""
+    B = q.shape[0]
+    page = k_pages.shape[1]
+    k = k_pages[block_table]          # [B, max_pages, page, Hkv, D]
+    v = v_pages[block_table]
+    B_, n, p, H, D = k.shape
+    k = k.reshape(B_, n * p, H, D)
+    v = v.reshape(B_, n * p, H, D)
+    return flash_decode_ref(q, k, v, lens, softcap=softcap)
+
+
+def ssd_chunk_ref(x, dt, A, B_, C_):
+    """Within-chunk SSD oracle (same signature as kernels.ssd_scan.ssd_chunk)."""
+    dtA = dt * A[None, None, None, :]
+    cs = jnp.cumsum(dtA, axis=2)
+    Q = x.shape[2]
+    diff = cs[:, :, :, None, :] - cs[:, :, None, :, :]
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    M = jnp.where(tri[None, None, :, :, None], jnp.exp(diff), 0.0)
+    cb = jnp.einsum("bcthn,bcshn->bchts", C_, B_)
+    scores = cb * jnp.moveaxis(M, -1, 2)
+    xdt = x * dt[..., None]
+    y = jnp.einsum("bchts,bcshp->bcthp", scores, xdt)
+    total = cs[:, :, -1, :]
+    w = jnp.exp(total[:, :, None, :] - cs) * dt
+    S = jnp.einsum("bcqh,bcqhn,bcqhp->bchpn", w, B_, x)
+    return y, S

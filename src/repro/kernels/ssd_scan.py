@@ -1,0 +1,98 @@
+"""SSD (Mamba2) chunk kernel — the within-chunk quadratic form on the MXU.
+
+For each (batch, head, chunk) grid cell the kernel computes
+  y_intra = ((C B^T) .* exp(cs_t - cs_s) .* causal) @ (dt * x)
+  S_chunk = (exp(cs_Q - cs) * dt * B)^T @ x            [N, P]
+entirely in VMEM; the cheap cross-chunk recurrence (combining S_chunk into
+running states) stays in jnp (``repro.models.ssm``).
+
+Chunk length Q and state/head dims are MXU-friendly (Q=128/256, N=128, P=64
+padded to 128 by ops.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, B_ref, C_ref, A_ref, y_ref, s_ref):
+    # blocks: x [Q, P]; dt [Q, 1]; B/C [Q, N]; A [1, 1]
+    x = x_ref[0, 0].astype(jnp.float32)          # [Q, P]
+    dt = dt_ref[0, 0].astype(jnp.float32)        # [Q, 1]
+    B_ = B_ref[0, 0].astype(jnp.float32)         # [Q, N]
+    C_ = C_ref[0, 0].astype(jnp.float32)
+    A = A_ref[0, 0].astype(jnp.float32)          # [1, 1] (negative)
+
+    dtA = dt * A                                 # [Q, 1]
+    cs = jnp.cumsum(dtA, axis=0)                 # inclusive
+    Q = x.shape[0]
+    # decay matrix M[t, s] = exp(cs_t - cs_s) for t >= s
+    diff = cs - cs.T                             # [Q(t), Q(s)] broadcast
+    tri = (jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+           >= jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1))
+    M = jnp.where(tri, jnp.exp(diff), 0.0)
+
+    cb = jax.lax.dot_general(C_, B_, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [Q, Q]
+    scores = cb * M
+    xdt = x * dt                                 # [Q, P]
+    y = jax.lax.dot_general(scores, xdt, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    total = cs[-1:, :]                           # [1, 1]
+    w = jnp.exp(total - cs) * dt                 # [Q, 1]
+    S = jax.lax.dot_general(B_ * w, x, (((0,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [N, P]
+    s_ref[0, 0] = S.astype(s_ref.dtype)
+
+
+def ssd_chunk(x: jax.Array, dt: jax.Array, A: jax.Array, B_: jax.Array,
+              C_: jax.Array, *, interpret: bool = False
+              ) -> tuple[jax.Array, jax.Array]:
+    """Within-chunk SSD.
+
+    Args:
+      x:  [B, Nc, Q, H, P] fp32 (chunked inputs, post conv/activation)
+      dt: [B, Nc, Q, H]    fp32 softplus'd steps
+      A:  [H]              fp32 negative decays
+      B_, C_: [B, Nc, Q, H, N] (groups already broadcast to heads)
+    Returns:
+      (y_intra [B, Nc, Q, H, P], S_chunk [B, Nc, H, N, P])
+    """
+    Bsz, Nc, Q, H, P = x.shape
+    N = B_.shape[-1]
+    # layout: lead (B*Nc, H) grid, blocks [Q, P] / [Q, N]
+    xb = x.reshape(Bsz * Nc, Q, H, P).swapaxes(1, 2)       # [G, H, Q, P]
+    dtb = dt.reshape(Bsz * Nc, Q, H).swapaxes(1, 2)[..., None]
+    Bb = B_.reshape(Bsz * Nc, Q, H, N).swapaxes(1, 2)
+    Cb = C_.reshape(Bsz * Nc, Q, H, N).swapaxes(1, 2)
+    Ab = jnp.broadcast_to(A[None, :, None, None], (Bsz * Nc, H, 1, 1))
+
+    y, S = pl.pallas_call(
+        _ssd_kernel,
+        grid=(Bsz * Nc, H),
+        in_specs=[
+            pl.BlockSpec((1, 1, Q, P), lambda g, h: (g, h, 0, 0)),
+            pl.BlockSpec((1, 1, Q, 1), lambda g, h: (g, h, 0, 0)),
+            pl.BlockSpec((1, 1, Q, N), lambda g, h: (g, h, 0, 0)),
+            pl.BlockSpec((1, 1, Q, N), lambda g, h: (g, h, 0, 0)),
+            pl.BlockSpec((1, 1, 1, 1), lambda g, h: (g, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, Q, P), lambda g, h: (g, h, 0, 0)),
+            pl.BlockSpec((1, 1, N, P), lambda g, h: (g, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bsz * Nc, H, Q, P), jnp.float32),
+            jax.ShapeDtypeStruct((Bsz * Nc, H, N, P), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xb, dtb, Bb, Cb, Ab)
+    y = y.swapaxes(1, 2).reshape(Bsz, Nc, Q, H, P)
+    S = S.reshape(Bsz, Nc, H, N, P).swapaxes(-1, -2)       # [B,Nc,H,P,N]
+    return y, S

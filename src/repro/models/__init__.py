@@ -1,0 +1,10 @@
+from repro.models.config import ModelConfig  # noqa: F401
+from repro.models.model import (  # noqa: F401
+    DecodeCache,
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    param_count,
+    prefill,
+)

@@ -1,0 +1,192 @@
+"""Grouped-query attention: full-sequence (train/prefill) and cached decode.
+
+Sharding strategy (resolved per-arch by ``repro.launch.sharding``):
+  * train/prefill: heads sharded over `model` when divisible, optionally
+    padded to the next multiple of TP ("pad"), else replicated.
+  * decode: the KV cache is sharded along the *sequence* axis over `model`
+    ("kv_seq" logical axis) — flash-decoding semantics; GSPMD inserts the
+    partial-softmax combine collectives.  This removes head-divisibility
+    constraints and spreads KV memory evenly at 32k-500k contexts.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_rope, rms_norm, softcap
+from repro.pshard import logical
+
+NEG_INF = -2.0 ** 30
+
+
+def init_attention(key: jax.Array, cfg: ModelConfig, dtype) -> dict:
+    ks = jax.random.split(key, 6)
+    d, q_dim, kv_dim = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    s = 1.0 / np.sqrt(d)
+    p = {
+        "wq": (jax.random.normal(ks[0], (d, q_dim)) * s).astype(dtype),
+        "wk": (jax.random.normal(ks[1], (d, kv_dim)) * s).astype(dtype),
+        "wv": (jax.random.normal(ks[2], (d, kv_dim)) * s).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (q_dim, d)) / np.sqrt(q_dim)).astype(dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((q_dim,), dtype)
+        p["bk"] = jnp.zeros((kv_dim,), dtype)
+        p["bv"] = jnp.zeros((kv_dim,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((cfg.head_dim,), dtype)
+        p["k_norm"] = jnp.zeros((cfg.head_dim,), dtype)
+    return p
+
+
+def _project_qkv(x, p, cfg: ModelConfig, positions):
+    B, S, _ = x.shape
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, cfg.n_q_heads, cfg.head_dim)
+    k = k.reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.pos_embedding == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _expand_kv(k: jax.Array, n_q_heads: int) -> jax.Array:
+    """[B, S, Hkv, D] -> [B, S, Hq, D] by group broadcast."""
+    B, S, Hkv, D = k.shape
+    rep = n_q_heads // Hkv
+    if rep == 1:
+        return k
+    k = jnp.broadcast_to(k[:, :, :, None, :], (B, S, Hkv, rep, D))
+    return k.reshape(B, S, Hkv * rep, D)
+
+
+def causal_mask(S: int, window: int = 0) -> jax.Array:
+    """[S, S] additive mask; window > 0 limits lookback (local attention)."""
+    i = jnp.arange(S)[:, None]
+    j = jnp.arange(S)[None, :]
+    ok = j <= i
+    if window > 0:
+        ok = ok & (j > i - window)
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+CHUNK_THRESHOLD = 2048   # sequences longer than this use the chunked path
+Q_CHUNK = 1024
+
+
+def _attend(q, k, v, cfg: ModelConfig, q_pos, k_pos, is_local):
+    """softmax((q k^T) * scale + mask) v with explicit position masks.
+
+    q: [B, Sq, H, D]; k/v: [B, Sk, H, D]; q_pos: [Sq]; k_pos: [Sk].
+    """
+    scale = 1.0 / np.sqrt(cfg.head_dim)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    scores = softcap(scores, cfg.attn_logit_softcap)
+    ok = k_pos[None, :] <= q_pos[:, None]
+    if cfg.local_window > 0:
+        ok_local = ok & (k_pos[None, :] > q_pos[:, None] - cfg.local_window)
+        ok = jnp.where(jnp.asarray(is_local), ok_local, ok)
+    scores = jnp.where(ok[None, None, :, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def full_attention(x: jax.Array, p: dict, cfg: ModelConfig,
+                   positions: jax.Array, is_local: jax.Array | bool = False
+                   ) -> jax.Array:
+    """Train/prefill self-attention over the whole sequence.
+
+    For S > CHUNK_THRESHOLD the query dimension is processed in rematted
+    chunks (flash-style memory behavior: the [S, S] score matrix is never
+    materialized; the chunk body is recomputed in the backward pass).
+
+    is_local: python bool or traced scalar selecting the gemma2 local mask.
+    """
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(x, p, cfg, positions)
+    q = logical(q, "batch", "seq", "heads", None)
+    k = logical(k, "batch", "seq", "kv_heads", None)
+    v = logical(v, "batch", "seq", "kv_heads", None)
+    k = _expand_kv(k, cfg.n_q_heads)
+    v = _expand_kv(v, cfg.n_q_heads)
+    pos1d = jnp.arange(S)
+
+    if S <= CHUNK_THRESHOLD:
+        out = _attend(q, k, v, cfg, pos1d, pos1d, is_local)
+    else:
+        C = Q_CHUNK
+        n_chunks = (S + C - 1) // C
+        assert S % C == 0, f"seq {S} must be a multiple of chunk {C}"
+        qc = q.reshape(B, n_chunks, C, cfg.n_q_heads, cfg.head_dim)
+        qc = jnp.moveaxis(qc, 1, 0)
+
+        def body(_, args):
+            q_i, i = args
+            q_pos = i * C + jnp.arange(C)
+            o = _attend(q_i, k, v, cfg, q_pos, pos1d, is_local)
+            return None, o
+
+        body = jax.checkpoint(body, prevent_cse=False)
+        # unroll with the layer scan so dry-run cost_analysis counts every trip
+        _, oc = jax.lax.scan(body, None, (qc, jnp.arange(n_chunks)),
+                             unroll=(cfg.scan_unroll > 1))
+        out = jnp.moveaxis(oc, 0, 1).reshape(B, S, cfg.n_q_heads, cfg.head_dim)
+
+    out = logical(out, "batch", "seq", "heads", None)
+    out = out.reshape(B, S, cfg.q_dim)
+    return out @ p["wo"]
+
+
+def decode_attention(x: jax.Array, p: dict, cfg: ModelConfig,
+                     k_cache: jax.Array, v_cache: jax.Array,
+                     pos: jax.Array, is_local: jax.Array | bool = False
+                     ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One decode step with a dense KV cache.
+
+    Args:
+      x: [B, 1, d_model] current token embedding.
+      k_cache / v_cache: [B, Smax, Hkv, D]; the new K/V is written at `pos`.
+      pos: [B] int32 write/attend position per sequence.
+    Returns:
+      (attn_out [B, 1, d_model], new k_cache, new v_cache)
+    """
+    B, Smax = k_cache.shape[0], k_cache.shape[1]
+    q, k_new, v_new = _project_qkv(x, p, cfg, pos[:, None])
+    bidx = jnp.arange(B)
+    k_cache = k_cache.at[bidx, pos].set(k_new[:, 0].astype(k_cache.dtype))
+    v_cache = v_cache.at[bidx, pos].set(v_new[:, 0].astype(v_cache.dtype))
+    # Sequence-sharded cache: flash-decoding combine happens inside the
+    # softmax/contraction that GSPMD partitions along `kv_seq`.
+    k_cache = logical(k_cache, "batch", "kv_seq", "kv_heads", None)
+    v_cache = logical(v_cache, "batch", "kv_seq", "kv_heads", None)
+
+    kk = _expand_kv(k_cache, cfg.n_q_heads)
+    vv = _expand_kv(v_cache, cfg.n_q_heads)
+    if kk.dtype != x.dtype:      # fp8/quantized caches upcast for compute
+        kk = kk.astype(x.dtype)
+        vv = vv.astype(x.dtype)
+    scale = 1.0 / np.sqrt(cfg.head_dim)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, kk).astype(jnp.float32) * scale
+    scores = softcap(scores, cfg.attn_logit_softcap)
+    j = jnp.arange(Smax)[None, None, None, :]
+    ok = j <= pos[:, None, None, None]
+    if cfg.local_window > 0:
+        lo = pos[:, None, None, None] - cfg.local_window
+        ok_local = ok & (j > lo)
+        sel = jnp.asarray(is_local)
+        ok = jnp.where(sel, ok_local, ok)
+    scores = jnp.where(ok, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vv)
+    out = out.reshape(B, 1, cfg.q_dim)
+    return out @ p["wo"], k_cache, v_cache

@@ -1,0 +1,90 @@
+"""Shared building blocks: norms, MLPs, rotary/sinusoidal positions."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.pshard import logical
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(dtype)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    if cap <= 0.0:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# -- positions ---------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [B, S, H, D]; positions: [B, S] (or [S])."""
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(d, theta), dtype=jnp.float32)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [B, S, D/2]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sincos_embedding(positions: jax.Array, d_model: int) -> jax.Array:
+    """Absolute sinusoidal embeddings (musicgen). positions: [B, S]."""
+    half = d_model // 2
+    freqs = jnp.exp(-np.log(10_000.0) * jnp.arange(half) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(angles), jnp.cos(angles)], axis=-1)
+
+
+# -- MLPs ---------------------------------------------------------------------
+
+
+def init_mlp(key: jax.Array, d_model: int, d_ff: int, variant: str,
+             bias: bool, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    scale_in = 1.0 / np.sqrt(d_model)
+    scale_out = 1.0 / np.sqrt(d_ff)
+    p = {}
+    if variant in ("swiglu", "geglu"):
+        p["w_gate"] = (jax.random.normal(ks[0], (d_model, d_ff)) * scale_in).astype(dtype)
+        p["w_up"] = (jax.random.normal(ks[1], (d_model, d_ff)) * scale_in).astype(dtype)
+    else:  # gelu: single up projection
+        p["w_up"] = (jax.random.normal(ks[1], (d_model, d_ff)) * scale_in).astype(dtype)
+    p["w_down"] = (jax.random.normal(ks[2], (d_ff, d_model)) * scale_out).astype(dtype)
+    if bias:
+        p["b_up"] = jnp.zeros((d_ff,), dtype)
+        p["b_down"] = jnp.zeros((d_model,), dtype)
+    return p
+
+
+def mlp(x: jax.Array, p: dict, variant: str) -> jax.Array:
+    """x: [B, S, d_model] -> [B, S, d_model].  TP: d_ff sharded column->row."""
+    up = x @ p["w_up"]
+    if "b_up" in p:
+        up = up + p["b_up"]
+    if variant == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * up
+    elif variant == "geglu":
+        h = jax.nn.gelu(x @ p["w_gate"], approximate=True) * up
+    else:
+        h = jax.nn.gelu(up, approximate=True)
+    h = logical(h, "batch", "seq", "d_ff")
+    out = h @ p["w_down"]
+    if "b_down" in p:
+        out = out + p["b_down"]
+    return out

@@ -1,0 +1,346 @@
+"""The unified decoder-only model covering all assigned architecture families.
+
+One scan-over-layers body handles: dense GQA attention (with gemma2's
+local/global alternation + softcaps + sandwich norms), MoE MLPs, SSD mixers
+(mamba2), and hybrid parallel attention+SSM heads (hymba).  VLM/audio archs
+use the same backbone; their modality frontends are stubs that feed
+precomputed token ids / frame embeddings (see ``repro.launch.dryrun
+.input_specs``).
+
+Entry points:
+  init_params(cfg, key)                  -> parameter pytree (layers stacked)
+  forward(params, cfg, tokens|embeds)    -> logits           (train)
+  prefill(params, cfg, tokens)           -> (logits, DecodeCache)
+  decode_step(params, cfg, token, cache) -> (logits, DecodeCache)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention as attn_lib
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.config import ModelConfig
+from repro.models.layers import init_mlp, mlp, rms_norm, sincos_embedding, softcap
+from repro.pshard import logical
+
+
+# --------------------------------------------------------------------------
+# Decode cache.
+# --------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["k", "v", "ssm", "conv", "pos"],
+    meta_fields=[],
+)
+@dataclasses.dataclass
+class DecodeCache:
+    k: Any      # [L, B, Smax, Hkv, D] or None
+    v: Any
+    ssm: Any    # [L, B, H, P, N] fp32 or None
+    conv: Any   # [L, B, W-1, conv_ch] or None
+    pos: Any    # [B] int32: number of tokens already in the cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> DecodeCache:
+    L = cfg.n_layers
+    k = v = ssm = conv = None
+    if cfg.has_attn:
+        shape = (L, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+        k = jnp.zeros(shape, dtype)
+        v = jnp.zeros(shape, dtype)
+    if cfg.has_ssm:
+        ssm = jnp.zeros((L, batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                         cfg.ssm_state), jnp.float32)
+        conv = jnp.zeros((L, batch, cfg.ssm_conv_width - 1,
+                          ssm_lib.conv_channels(cfg)), dtype)
+    return DecodeCache(k, v, ssm, conv, jnp.zeros((batch,), jnp.int32))
+
+
+# --------------------------------------------------------------------------
+# Parameter init.
+# --------------------------------------------------------------------------
+
+
+def _init_block(key: jax.Array, cfg: ModelConfig, dtype) -> dict:
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+    p: dict = {"ln1": jnp.zeros((d,), dtype)}
+    if cfg.has_attn:
+        p["attn"] = attn_lib.init_attention(ks[0], cfg, dtype)
+    if cfg.has_ssm:
+        p["ssm"] = ssm_lib.init_ssm(ks[1], cfg, dtype)
+    if cfg.hybrid:
+        p["attn_out_norm"] = jnp.zeros((d,), dtype)
+        p["ssm_out_norm"] = jnp.zeros((d,), dtype)
+    if cfg.sandwich_norm:
+        p["post_ln1"] = jnp.zeros((d,), dtype)
+    if cfg.is_moe:
+        p["ln2"] = jnp.zeros((d,), dtype)
+        p["moe"] = moe_lib.init_moe(ks[2], cfg, dtype)
+    elif cfg.d_ff > 0:
+        p["ln2"] = jnp.zeros((d,), dtype)
+        p["mlp"] = init_mlp(ks[3], d, cfg.d_ff, cfg.mlp_variant,
+                            cfg.mlp_bias, dtype)
+    if cfg.sandwich_norm and (cfg.is_moe or cfg.d_ff > 0):
+        p["post_ln2"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def init_params(cfg: ModelConfig, key: jax.Array, dtype=jnp.bfloat16) -> dict:
+    k_embed, k_blocks, k_head = jax.random.split(key, 3)
+    V = cfg.padded_vocab()
+    embed = (jax.random.normal(k_embed, (V, cfg.d_model)) * 0.02).astype(dtype)
+    layer_keys = jax.random.split(k_blocks, cfg.n_layers)
+    blocks = jax.vmap(lambda k: _init_block(k, cfg, dtype))(layer_keys)
+    params = {
+        "embed": embed,
+        "blocks": blocks,
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (
+            jax.random.normal(k_head, (cfg.d_model, V)) * 0.02).astype(dtype)
+    return params
+
+
+def param_count(params) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+
+
+# --------------------------------------------------------------------------
+# Block application (shared by all modes).
+# --------------------------------------------------------------------------
+
+
+def _mixer(x, bp, cfg: ModelConfig, layer_idx, positions, mode,
+           kv=None, ssm_state=None, conv=None, pos=None):
+    """Token mixing: attention and/or SSM.  Returns (out, new_kv, new_ssm_pair)."""
+    is_local = (layer_idx % 2 == 0) if cfg.local_window > 0 else False
+    attn_out = None
+    new_k = new_v = None
+    if cfg.has_attn:
+        if mode == "decode":
+            attn_out, new_k, new_v = attn_lib.decode_attention(
+                x, bp["attn"], cfg, kv[0], kv[1], pos, is_local)
+        else:
+            attn_out = attn_lib.full_attention(
+                x, bp["attn"], cfg, positions, is_local)
+    ssm_out = None
+    new_state = new_conv = None
+    if cfg.has_ssm:
+        if mode == "decode":
+            ssm_out, new_state, new_conv = ssm_lib.ssm_decode_step(
+                x, bp["ssm"], cfg, ssm_state, conv)
+        else:
+            ssm_out, new_state, new_conv = ssm_lib.ssm_forward(
+                x, bp["ssm"], cfg, ssm_state, conv)
+    if cfg.hybrid:
+        out = 0.5 * (rms_norm(attn_out, bp["attn_out_norm"], cfg.norm_eps)
+                     + rms_norm(ssm_out, bp["ssm_out_norm"], cfg.norm_eps))
+    elif cfg.has_attn:
+        out = attn_out
+    else:
+        out = ssm_out
+    return out, (new_k, new_v), (new_state, new_conv)
+
+
+def _block(x, bp, cfg: ModelConfig, layer_idx, positions, mode,
+           kv=None, ssm_state=None, conv=None, pos=None, with_aux=False):
+    h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+    mix, new_kv, new_ssm = _mixer(h, bp, cfg, layer_idx, positions, mode,
+                                  kv, ssm_state, conv, pos)
+    if cfg.sandwich_norm:
+        mix = rms_norm(mix, bp["post_ln1"], cfg.norm_eps)
+    x = x + mix
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.is_moe or cfg.d_ff > 0:
+        h2 = rms_norm(x, bp["ln2"], cfg.norm_eps)
+        if cfg.is_moe:
+            m = moe_lib.moe_block(h2, bp["moe"], cfg)
+            if with_aux:
+                aux = moe_lib.load_balance_loss(h2, bp["moe"], cfg)
+        else:
+            m = mlp(h2, bp["mlp"], cfg.mlp_variant)
+        if cfg.sandwich_norm:
+            m = rms_norm(m, bp["post_ln2"], cfg.norm_eps)
+        x = x + m
+    # Residual-stream boundary: "act_seq" is sequence-parallel (sharded
+    # over `model`) in training plans to cut layer-boundary activation memory.
+    x = logical(x, "batch", "act_seq", "d_model")
+    return x, new_kv, new_ssm, aux
+
+
+# --------------------------------------------------------------------------
+# Embedding & head.
+# --------------------------------------------------------------------------
+
+
+def embed_inputs(params, cfg: ModelConfig, tokens=None, embeds=None,
+                 positions=None):
+    if embeds is None:
+        x = params["embed"][tokens]
+    else:
+        x = embeds.astype(params["embed"].dtype)
+    if cfg.scale_embedding:
+        x = x * np.sqrt(cfg.d_model)
+    if cfg.pos_embedding == "sincos":
+        x = x + sincos_embedding(positions, cfg.d_model).astype(x.dtype)
+    return x
+
+
+def lm_logits(params, cfg: ModelConfig, x):
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head
+    logits = softcap(logits.astype(jnp.float32), cfg.final_logit_softcap)
+    return logical(logits, "batch", "seq", "vocab")
+
+
+# --------------------------------------------------------------------------
+# Full-sequence forward (training).
+# --------------------------------------------------------------------------
+
+
+def forward(params, cfg: ModelConfig, tokens=None, embeds=None,
+            pos_offset: int = 0, remat: bool = False, with_aux: bool = False):
+    """Returns logits [B, S, padded_vocab] (fp32); (logits, aux) if with_aux."""
+    B, S = (tokens.shape if tokens is not None else embeds.shape[:2])
+    positions = pos_offset + jnp.arange(S)[None, :].astype(jnp.int32)
+    positions = jnp.broadcast_to(positions, (B, S))
+    x = embed_inputs(params, cfg, tokens, embeds, positions)
+    x = logical(x, "batch", "act_seq", "d_model")
+
+    def body(carry, scanned):
+        x, aux_sum = carry
+        bp, layer_idx = scanned
+        x, _, _, aux = _block(x, bp, cfg, layer_idx, positions, "full",
+                              with_aux=with_aux)
+        return (x, aux_sum + aux), None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    (x, aux_sum), _ = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)),
+        (params["blocks"], jnp.arange(cfg.n_layers)),
+        unroll=cfg.scan_unroll)
+    logits = lm_logits(params, cfg, x)
+    if with_aux:
+        return logits, aux_sum / cfg.n_layers
+    return logits
+
+
+# --------------------------------------------------------------------------
+# Prefill: full-sequence forward that materializes the decode cache.
+# --------------------------------------------------------------------------
+
+
+def prefill(params, cfg: ModelConfig, tokens=None, embeds=None):
+    """Returns (last-token logits [B, Vpad], DecodeCache at length S)."""
+    B, S = (tokens.shape if tokens is not None else embeds.shape[:2])
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S)).astype(jnp.int32)
+    x = embed_inputs(params, cfg, tokens, embeds, positions)
+
+    def body(x, scanned):
+        bp, layer_idx = scanned
+        # full-mode block, capturing per-layer K/V and SSM terminal state
+        h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+        caches = {}
+        is_local = (layer_idx % 2 == 0) if cfg.local_window > 0 else False
+        attn_out = None
+        if cfg.has_attn:
+            q, k, v = attn_lib._project_qkv(h, bp["attn"], cfg, positions)
+            caches["k"], caches["v"] = k, v
+            attn_out = attn_lib.full_attention(h, bp["attn"], cfg, positions,
+                                               is_local)
+        ssm_out = None
+        if cfg.has_ssm:
+            ssm_out, state, conv_w = ssm_lib.ssm_forward(h, bp["ssm"], cfg)
+            caches["ssm"], caches["conv"] = state, conv_w
+        if cfg.hybrid:
+            mix = 0.5 * (rms_norm(attn_out, bp["attn_out_norm"], cfg.norm_eps)
+                         + rms_norm(ssm_out, bp["ssm_out_norm"], cfg.norm_eps))
+        elif cfg.has_attn:
+            mix = attn_out
+        else:
+            mix = ssm_out
+        if cfg.sandwich_norm:
+            mix = rms_norm(mix, bp["post_ln1"], cfg.norm_eps)
+        x = x + mix
+        if cfg.is_moe or cfg.d_ff > 0:
+            h2 = rms_norm(x, bp["ln2"], cfg.norm_eps)
+            m = (moe_lib.moe_block(h2, bp["moe"], cfg) if cfg.is_moe
+                 else mlp(h2, bp["mlp"], cfg.mlp_variant))
+            if cfg.sandwich_norm:
+                m = rms_norm(m, bp["post_ln2"], cfg.norm_eps)
+            x = x + m
+        x = logical(x, "batch", "seq", "d_model")
+        return x, caches
+
+    x, caches = jax.lax.scan(
+        body, x, (params["blocks"], jnp.arange(cfg.n_layers)),
+        unroll=cfg.scan_unroll)
+    logits = lm_logits(params, cfg, x[:, -1:, :])[:, 0]
+    pos = jnp.full((B,), S, jnp.int32)
+    cache = DecodeCache(
+        k=caches.get("k"), v=caches.get("v"),
+        ssm=caches.get("ssm"), conv=caches.get("conv"), pos=pos)
+    return logits, cache
+
+
+# --------------------------------------------------------------------------
+# Decode step.
+# --------------------------------------------------------------------------
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache: DecodeCache,
+                embeds=None):
+    """One token for every sequence in the batch.
+
+    Args:
+      tokens: [B] int32 (or embeds [B, 1, d] for stub-frontend archs).
+      cache: DecodeCache whose attention K/V buffers have a fixed max length.
+    Returns: (logits [B, Vpad] fp32, updated DecodeCache)
+    """
+    pos = cache.pos
+    B = pos.shape[0]
+    positions = pos[:, None]
+    x = embed_inputs(params, cfg, None if tokens is None else tokens[:, None],
+                     embeds, positions)
+    x = logical(x, "batch", "seq", "d_model")
+
+    def body(x, scanned):
+        bp, layer_idx, k_l, v_l, ssm_l, conv_l = scanned
+        x, new_kv, new_ssm, _ = _block(
+            x, bp, cfg, layer_idx, positions, "decode",
+            kv=(k_l, v_l), ssm_state=ssm_l, conv=conv_l, pos=pos)
+        ys = {}
+        if cfg.has_attn:
+            ys["k"], ys["v"] = new_kv
+        if cfg.has_ssm:
+            ys["ssm"], ys["conv"] = new_ssm
+        return x, ys
+
+    L = cfg.n_layers
+    dummy = jnp.zeros((L,), jnp.int32)
+    xs = (params["blocks"], jnp.arange(L),
+          cache.k if cache.k is not None else dummy,
+          cache.v if cache.v is not None else dummy,
+          cache.ssm if cache.ssm is not None else dummy,
+          cache.conv if cache.conv is not None else dummy)
+    x, ys = jax.lax.scan(body, x, xs, unroll=cfg.scan_unroll)
+    logits = lm_logits(params, cfg, x)[:, 0]
+    new_cache = DecodeCache(
+        k=ys.get("k", cache.k), v=ys.get("v", cache.v),
+        ssm=ys.get("ssm", cache.ssm), conv=ys.get("conv", cache.conv),
+        pos=pos + 1)
+    return logits, new_cache

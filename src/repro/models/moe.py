@@ -1,0 +1,183 @@
+"""Top-k mixture-of-experts with group-local capacity dispatch.
+
+Design (TPU-native, GSPMD-friendly):
+  * tokens are grouped along the batch dimension (groups align with the data
+    sharding), capacity is per (group, expert) = ceil(topk * tokens_per_group
+    * capacity_factor / E);
+  * dispatch positions come from a one-hot cumulative sum *within the group*
+    (no global sort, no giant [N, E, C] dispatch einsum tensors);
+  * expert buffers [G, E, C, d] are scattered/gathered with per-group indices;
+    expert weights [E, d, ff] shard over `model` as expert-parallelism when
+    E % TP == 0 ("ep"), otherwise over the ff dim ("tp", expert-tensor-
+    parallel: granite's 40 experts on TP=16).
+
+Overflowing tokens are dropped (standard capacity-based MoE); the router uses
+softmax-then-topk with renormalized combine weights (OLMoE-style).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.pshard import logical
+
+
+def init_moe(key: jax.Array, cfg: ModelConfig, dtype) -> dict:
+    ks = jax.random.split(key, 4)
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    s_in, s_out = 1.0 / np.sqrt(d), 1.0 / np.sqrt(ff)
+    return {
+        "router": (jax.random.normal(ks[0], (d, E)) * s_in).astype(jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (E, d, ff)) * s_in).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (E, d, ff)) * s_in).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (E, ff, d)) * s_out).astype(dtype),
+    }
+
+
+def _pick_groups(n_tokens_per_seq: int, batch: int, n_experts: int,
+                 top_k: int) -> int:
+    """Groups divide the batch; keep tokens/group >= ~4*E/topk so the
+    per-expert capacity ceil() stays cheap, but cap group size for memory."""
+    target_tokens = max(4 * n_experts // max(top_k, 1), 64)
+    g = batch
+    while g > 1 and (batch // g) * n_tokens_per_seq < target_tokens:
+        # halve groups (g must divide batch; walk divisors downward)
+        for cand in range(g - 1, 0, -1):
+            if batch % cand == 0:
+                g = cand
+                break
+        else:
+            g = 1
+    return max(1, g)
+
+
+def moe_dense(x: jax.Array, p: dict, cfg: ModelConfig) -> jax.Array:
+    """Decode-path MoE: every expert on every token, gate-combined.
+
+    Exact (no capacity drops).  For single-token decode the step is
+    HBM-bound on the expert weights, which are read once regardless of the
+    routing — so the E/topk FLOPs overhead is hidden and this beats
+    per-token weight gathers for batch >= E/topk.
+    """
+    B, S, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    xt = x.reshape(B * S, d)
+    logits = xt.astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, topi = jax.lax.top_k(probs, K)
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9)
+    gates = jnp.zeros_like(probs)
+    gates = jax.vmap(lambda g, i, v: g.at[i].set(v))(gates, topi, gate_vals)
+    gate = jnp.einsum("nd,edf->nef", xt, p["w_gate"])
+    up = jnp.einsum("nd,edf->nef", xt, p["w_up"])
+    h = jax.nn.silu(gate) * up
+    h = logical(h, None, "experts", "expert_ff")
+    y_all = jnp.einsum("nef,efd->ned", h, p["w_down"])
+    y = jnp.einsum("ned,ne->nd", y_all, gates.astype(x.dtype))
+    return y.reshape(B, S, d)
+
+
+def moe_block(x: jax.Array, p: dict, cfg: ModelConfig,
+              capacity_factor: float | None = None) -> jax.Array:
+    """x: [B, S, d] -> [B, S, d]."""
+    B, S, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    # Small token counts (decode steps, CPU-scale smoke/serving): the dense
+    # path is exact and HBM-bound anyway.  Large scale uses capacity-based
+    # dispatch (drops bounded by the load-balancing loss during training).
+    if B * S <= 2048:
+        return moe_dense(x, p, cfg)
+    cf = capacity_factor if capacity_factor is not None else cfg.moe_capacity_factor
+    G = _pick_groups(S, B, E, K)
+    N = (B // G) * S                      # tokens per group
+    C = max(1, int(np.ceil(K * N * cf / E)))
+
+    xg = x.reshape(G, N, d)
+    logits = (xg.astype(jnp.float32) @ p["router"])          # [G, N, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, topi = jax.lax.top_k(probs, K)                # [G, N, K]
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # Position of each (token, slot) within its expert's capacity buffer:
+    # cumulative count of earlier assignments to the same expert in the group.
+    oh = jax.nn.one_hot(topi, E, dtype=jnp.int32)            # [G, N, K, E]
+    flat_oh = oh.reshape(G, N * K, E)
+    pos = jnp.cumsum(flat_oh, axis=1) - flat_oh              # exclusive cumsum
+    pos = (pos * flat_oh).sum(-1).reshape(G, N, K)           # [G, N, K]
+    keep = pos < C
+    slot = jnp.where(keep, topi * C + pos, E * C)            # overflow -> dump slot
+
+    # Scatter tokens into expert buffers [G, E*C (+1 dump), d].
+    def scatter_group(buf_idx, xs):
+        buf = jnp.zeros((E * C + 1, d), xs.dtype)
+        idx = buf_idx.reshape(N * K)
+        vals = jnp.repeat(xs, K, axis=0)
+        return buf.at[idx].add(vals)
+
+    buffers = jax.vmap(scatter_group)(slot, xg)[:, : E * C, :]
+    buffers = buffers.reshape(G, E, C, d)
+    buffers = logical(buffers, "moe_groups", "experts", None, None)
+
+    # Expert FFN (SwiGLU), batched over experts.
+    gate = jnp.einsum("gecd,edf->gecf", buffers, p["w_gate"])
+    up = jnp.einsum("gecd,edf->gecf", buffers, p["w_up"])
+    h = jax.nn.silu(gate) * up
+    h = logical(h, "moe_groups", "experts", None, "expert_ff")
+    out_buf = jnp.einsum("gecf,efd->gecd", h, p["w_down"])
+    out_buf = logical(out_buf, "moe_groups", "experts", None, None)
+    out_buf = out_buf.reshape(G, E * C, d)
+    out_buf = jnp.concatenate(
+        [out_buf, jnp.zeros((G, 1, d), out_buf.dtype)], axis=1)
+
+    # Gather back and combine with renormalized gates.
+    def gather_group(buf, idx):
+        return buf[idx]                                      # [N*K, d]
+
+    slots_out = jax.vmap(gather_group)(out_buf, slot.reshape(G, N * K))
+    slots_out = slots_out.reshape(G, N, K, d)
+    w = (gate_vals * keep).astype(x.dtype)[..., None]
+    yg = (slots_out * w).sum(axis=2)                         # [G, N, d]
+    return yg.reshape(B, S, d)
+
+
+def load_balance_loss(x: jax.Array, p: dict, cfg: ModelConfig) -> jax.Array:
+    """Switch-style auxiliary loss: E * sum_e f_e * P_e.
+
+    f_e = fraction of tokens whose top-k set contains e; P_e = mean router
+    probability.  Keeps routing balanced so the capacity path's drop rate
+    stays negligible at scale.
+    """
+    B, S, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    logits = x.reshape(-1, d).astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    _, topi = jax.lax.top_k(probs, K)
+    chosen = jax.nn.one_hot(topi, E, dtype=jnp.float32).sum(1)  # [N, E]
+    f = chosen.mean(0)
+    P = probs.mean(0)
+    return E * jnp.sum(f * P) / K
+
+
+def moe_ref(x: jax.Array, p: dict, cfg: ModelConfig) -> jax.Array:
+    """Oracle: dense per-token expert evaluation (no capacity drops).
+
+    Used in tests; agreement holds whenever nothing overflows capacity.
+    """
+    B, S, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    logits = x.astype(jnp.float32).reshape(-1, d) @ p["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, topi = jax.lax.top_k(probs, K)
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9)
+    xt = x.reshape(-1, d)
+    gates_full = jnp.zeros_like(probs)
+    gates_full = jax.vmap(lambda g, i, v: g.at[i].set(v))(gates_full, topi, gate_vals)
+    # every expert on every token (tiny shapes only)
+    gate = jnp.einsum("nd,edf->enf", xt, p["w_gate"])
+    up = jnp.einsum("nd,edf->enf", xt, p["w_up"])
+    h = jax.nn.silu(gate) * up
+    y_all = jnp.einsum("enf,efd->end", h, p["w_down"])
+    y = jnp.einsum("end,ne->nd", y_all, gates_full.astype(x.dtype))
+    return y.reshape(B, S, d)

@@ -1,0 +1,30 @@
+"""Token sampling utilities (greedy / temperature / top-k) with vocab masking."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+def mask_padded_vocab(logits: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Disallow the padded vocab tail (ids >= cfg.vocab_size)."""
+    V = logits.shape[-1]
+    if V == cfg.vocab_size:
+        return logits
+    idx = jnp.arange(V)
+    return jnp.where(idx[None, :] < cfg.vocab_size, logits, -jnp.inf)
+
+
+def sample(logits: jax.Array, cfg: ModelConfig, key: jax.Array,
+           temperature: float = 0.0, top_k: int = 0) -> jax.Array:
+    """logits: [B, Vpad] -> token ids [B]."""
+    logits = mask_padded_vocab(logits, cfg)
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / temperature
+    if top_k > 0:
+        vals, _ = jax.lax.top_k(logits, top_k)
+        cutoff = vals[:, -1:]
+        logits = jnp.where(logits < cutoff, -jnp.inf, logits)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

@@ -1,0 +1,260 @@
+"""Mamba2 / SSD (state-space duality) mixer, plus the hybrid (hymba) path.
+
+Chunked SSD algorithm (Dao & Gu, 2024) for train/prefill:
+  within-chunk: masked (C_t . B_s) * exp(cs_t - cs_s) "attention" matmuls;
+  across chunks: an associative scan over per-chunk states [B, H, P, N].
+Decode keeps a constant-size recurrent state (the reason mamba2/hymba are the
+only archs assigned the long_500k shape).
+
+All scan math runs in fp32; projections stay in the compute dtype.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.pshard import logical
+
+
+def conv_channels(cfg: ModelConfig) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+
+
+def init_ssm(key: jax.Array, cfg: ModelConfig, dtype) -> dict:
+    """Per-stream projection weights (z, x, B, C, dt kept separate so the
+    head-aligned streams shard over the model axis without mixed layouts)."""
+    ks = jax.random.split(key, 8)
+    d, H, P, N, G = (cfg.d_model, cfg.ssm_heads, cfg.ssm_head_dim,
+                     cfg.ssm_state, cfg.ssm_groups)
+    d_inner = H * P
+    s = 1.0 / np.sqrt(d)
+    dt_init = jnp.log(jnp.exp(jnp.linspace(1e-3, 1e-1, H)) - 1.0)  # softplus^-1
+    W = cfg.ssm_conv_width
+    return {
+        "w_z": (jax.random.normal(ks[0], (d, d_inner)) * s).astype(dtype),
+        "w_x": (jax.random.normal(ks[1], (d, d_inner)) * s).astype(dtype),
+        "w_B": (jax.random.normal(ks[2], (d, G * N)) * s).astype(dtype),
+        "w_C": (jax.random.normal(ks[3], (d, G * N)) * s).astype(dtype),
+        "w_dt": (jax.random.normal(ks[4], (d, H)) * s).astype(dtype),
+        "conv_x": (jax.random.normal(ks[5], (W, d_inner)) * 0.2).astype(dtype),
+        "conv_B": (jax.random.normal(ks[6], (W, G * N)) * 0.2).astype(dtype),
+        "conv_C": (jax.random.normal(ks[7], (W, G * N)) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((conv_channels(cfg),), dtype),
+        "dt_bias": dt_init.astype(jnp.float32),
+        "A_log": jnp.zeros((H,), jnp.float32),   # A = -exp(A_log) = -1
+        "D": jnp.ones((H,), jnp.float32),
+        "norm_w": jnp.zeros((d_inner,), dtype),
+        "out_proj": (jax.random.normal(ks[4], (d_inner, d)) /
+                     np.sqrt(d_inner)).astype(dtype),
+    }
+
+
+def _project(x: jax.Array, p: dict):
+    """x [..., d] -> (z, xs, B, C, dt) per-stream projections."""
+    return (x @ p["w_z"], x @ p["w_x"], x @ p["w_B"], x @ p["w_C"],
+            x @ p["w_dt"])
+
+
+def _conv_weight(p: dict) -> jax.Array:
+    return jnp.concatenate([p["conv_x"], p["conv_B"], p["conv_C"]], axis=-1)
+
+
+def _gated_norm(y: jax.Array, z: jax.Array, w: jax.Array, eps: float) -> jax.Array:
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(y * y, axis=-1, keepdims=True)
+    return y * jax.lax.rsqrt(var + eps) * (1.0 + w.astype(jnp.float32))
+
+
+def ssd_chunked(xs, dt, A, B_, C_, chunk: int, init_state=None):
+    """Chunked SSD scan.
+
+    Args:
+      xs: [B, L, H, P] inputs (post-conv, activated), fp32.
+      dt: [B, L, H] softplus'd step sizes, fp32.
+      A:  [H] negative decay rates, fp32.
+      B_, C_: [B, L, G, N] input/output projections, fp32.
+      chunk: chunk length Q (L % Q == 0).
+      init_state: optional [B, H, P, N] initial state.
+    Returns:
+      (y [B, L, H, P], final_state [B, H, P, N])
+    """
+    Bsz, L, H, P = xs.shape
+    G, N = B_.shape[2], B_.shape[3]
+    Q = min(chunk, max(L, 1))
+    orig_L = L
+    pad = (-L) % Q
+    if pad:
+        # Zero-pad to a chunk multiple: dt=0 => decay exp(0)=1 keeps state,
+        # x=0 contributes nothing, so the final state is unaffected.
+        zf = lambda a: jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+        xs, dt, B_, C_ = zf(xs), zf(dt), zf(B_), zf(C_)
+        L = L + pad
+    Nc = L // Q
+    rep = H // G
+
+    xs_c = xs.reshape(Bsz, Nc, Q, H, P)
+    dt_c = dt.reshape(Bsz, Nc, Q, H)
+    B_c = B_.reshape(Bsz, Nc, Q, G, N)
+    C_c = C_.reshape(Bsz, Nc, Q, G, N)
+    # broadcast groups to heads
+    B_h = jnp.repeat(B_c, rep, axis=3)  # [B, Nc, Q, H, N]
+    C_h = jnp.repeat(C_c, rep, axis=3)
+
+    dtA = dt_c * A[None, None, None, :]                 # [B, Nc, Q, H] (<=0)
+    cs = jnp.cumsum(dtA, axis=2)                        # inclusive cumsum
+    total = cs[:, :, -1, :]                             # [B, Nc, H]
+
+    # Intra-chunk (the "duality" quadratic form).
+    # M[t, s] = exp(cs_t - cs_s) for t >= s.
+    diff = cs[:, :, :, None, :] - cs[:, :, None, :, :]  # [B,Nc,Q(t),Q(s),H]
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    M = jnp.where(tri[None, None, :, :, None], jnp.exp(diff), 0.0)
+    cb = jnp.einsum("bcthn,bcshn->bchts", C_h, B_h)     # [B,Nc,H,Q,Q]
+    scores = cb * jnp.moveaxis(M, -1, 2)                # [B,Nc,H,Q,Q]
+    xdt = xs_c * dt_c[..., None]                        # [B,Nc,Q,H,P]
+    y_intra = jnp.einsum("bchts,bcshp->bcthp", scores, xdt)
+
+    # Per-chunk end states.
+    decay_to_end = jnp.exp(total[:, :, None, :] - cs)   # [B,Nc,Q,H]
+    S_chunk = jnp.einsum("bcqh,bcqhn,bcqhp->bchpn",
+                         decay_to_end * dt_c, B_h, xs_c)
+
+    # Associative scan across chunks: state' = state * a + s.
+    a_tot = jnp.exp(total)                              # [B, Nc, H]
+    if init_state is not None:
+        # fold the initial state in as a virtual chunk 0
+        a_tot = jnp.concatenate([jnp.ones_like(a_tot[:, :1]), a_tot], axis=1)
+        S_chunk = jnp.concatenate([init_state[:, None].astype(S_chunk.dtype),
+                                   S_chunk], axis=1)
+
+    def combine(left, right):
+        a1, s1 = left
+        a2, s2 = right
+        return a1 * a2, s1 * a2[..., None, None] + s2
+
+    a_run, S_run = jax.lax.associative_scan(combine, (a_tot, S_chunk), axis=1)
+    if init_state is not None:
+        S_prev = S_run[:, :-1]                          # state entering chunk c
+        final_state = S_run[:, -1]
+    else:
+        S_prev = jnp.concatenate(
+            [jnp.zeros_like(S_run[:, :1]), S_run[:, :-1]], axis=1)
+        final_state = S_run[:, -1]
+
+    # Inter-chunk contribution: y_t += C_t . (S_prev * exp(cs_t)).
+    y_inter = jnp.einsum("bcqhn,bchpn->bcqhp", C_h * jnp.exp(cs)[..., None],
+                         S_prev)
+    y = (y_intra + y_inter).reshape(Bsz, L, H, P)
+    return y[:, :orig_L], final_state
+
+
+def ssm_forward(x: jax.Array, p: dict, cfg: ModelConfig,
+                init_state: jax.Array | None = None,
+                conv_init: jax.Array | None = None
+                ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Full-sequence SSD mixer.
+
+    Args:
+      x: [B, L, d_model].
+    Returns: (out [B, L, d_model], final_ssm_state [B,H,P,N],
+              final_conv_window [B, width-1, conv_channels])
+    """
+    Bsz, L, _ = x.shape
+    H, P = cfg.ssm_heads, cfg.ssm_head_dim
+    G, N = cfg.ssm_groups, cfg.ssm_state
+    W = cfg.ssm_conv_width
+
+    z, xs, B_, C_, dt = _project(x, p)
+    d_inner = H * P
+    if conv_init is None:
+        conv_init = jnp.zeros((Bsz, W - 1, conv_channels(cfg)), xs.dtype)
+    init_x, init_B, init_C = jnp.split(
+        conv_init.astype(xs.dtype), [d_inner, d_inner + G * N], axis=-1)
+    b_x, b_B, b_C = jnp.split(p["conv_b"], [d_inner, d_inner + G * N])
+
+    def causal_conv(stream, w, b, init):
+        padded = jnp.concatenate([init, stream], axis=1)
+        out = sum(padded[:, i:i + L] * w[i] for i in range(W))
+        return jax.nn.silu(out + b), padded[:, L:]
+
+    xs_c, win_x = causal_conv(xs, p["conv_x"], b_x, init_x)
+    B_c, win_B = causal_conv(B_, p["conv_B"], b_B, init_B)
+    C_c, win_C = causal_conv(C_, p["conv_C"], b_C, init_C)
+    new_conv_window = jnp.concatenate([win_x, win_B, win_C], axis=-1)
+
+    xs_f = xs_c.reshape(Bsz, L, H, P).astype(jnp.float32)
+    xs_f = logical(xs_f, "batch", "seq", "ssm_heads", None)
+    B_f = B_c.reshape(Bsz, L, G, N).astype(jnp.float32)
+    C_f = C_c.reshape(Bsz, L, G, N).astype(jnp.float32)
+    dt_f = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    y, state = ssd_chunked(xs_f, dt_f, A, B_f, C_f, cfg.ssm_chunk,
+                           init_state)
+    y = y + xs_f * p["D"][None, None, :, None]
+    y = y.reshape(Bsz, L, H * P)
+    y = _gated_norm(y, z, p["norm_w"], cfg.norm_eps)
+    out = y.astype(x.dtype) @ p["out_proj"]
+    return out, state, new_conv_window
+
+
+def ssm_decode_step(x: jax.Array, p: dict, cfg: ModelConfig,
+                    state: jax.Array, conv_window: jax.Array
+                    ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One recurrent step.
+
+    Args:
+      x: [B, 1, d_model]; state: [B, H, P, N] fp32;
+      conv_window: [B, W-1, conv_channels] (previous conv inputs).
+    """
+    Bsz = x.shape[0]
+    H, P = cfg.ssm_heads, cfg.ssm_head_dim
+    G, N = cfg.ssm_groups, cfg.ssm_state
+
+    z, xs, B_, C_, dt = _project(x[:, 0], p)
+    conv_in = jnp.concatenate([xs, B_, C_], axis=-1)     # [B, conv_ch]
+    window = jnp.concatenate([conv_window.astype(conv_in.dtype),
+                              conv_in[:, None]], axis=1)  # [B, W, ch]
+    conv = jnp.einsum("bwc,wc->bc", window, _conv_weight(p)) + p["conv_b"]
+    conv = jax.nn.silu(conv)
+    new_window = window[:, 1:]
+    xs_c, B_c, C_c = jnp.split(conv, [H * P, H * P + G * N], axis=-1)
+
+    xs_f = xs_c.reshape(Bsz, H, P).astype(jnp.float32)
+    B_f = jnp.repeat(B_c.reshape(Bsz, G, N), H // G, axis=1).astype(jnp.float32)
+    C_f = jnp.repeat(C_c.reshape(Bsz, G, N), H // G, axis=1).astype(jnp.float32)
+    dt_f = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B, H]
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt_f * A)                                # [B, H]
+
+    state = state * a[..., None, None] + jnp.einsum(
+        "bh,bhp,bhn->bhpn", dt_f, xs_f, B_f)
+    y = jnp.einsum("bhn,bhpn->bhp", C_f, state)
+    y = y + xs_f * p["D"][None, :, None]
+    y = y.reshape(Bsz, H * P)
+    y = _gated_norm(y, z, p["norm_w"], cfg.norm_eps)
+    out = (y.astype(x.dtype) @ p["out_proj"])[:, None]
+    return out, state, new_window
+
+
+def ssd_reference(xs, dt, A, B_, C_, init_state=None):
+    """Token-by-token recurrent oracle for the chunked/kernel paths."""
+    Bsz, L, H, P = xs.shape
+    G, N = B_.shape[2], B_.shape[3]
+    rep = H // G
+    B_h = jnp.repeat(B_, rep, axis=2)
+    C_h = jnp.repeat(C_, rep, axis=2)
+    state = (jnp.zeros((Bsz, H, P, N), jnp.float32) if init_state is None
+             else init_state)
+
+    def step(state, t):
+        a = jnp.exp(dt[:, t] * A[None, :])
+        state = state * a[..., None, None] + jnp.einsum(
+            "bh,bhp,bhn->bhpn", dt[:, t], xs[:, t], B_h[:, t])
+        y = jnp.einsum("bhn,bhpn->bhp", C_h[:, t], state)
+        return state, y
+
+    state, ys = jax.lax.scan(step, state, jnp.arange(L))
+    return jnp.moveaxis(ys, 0, 1), state

@@ -1,0 +1,57 @@
+"""Logical-axis sharding annotations, decoupled from the model code.
+
+Model code calls ``logical(x, "batch", "seq", "d_model")``; outside of a
+``sharding_rules`` context this is the identity (CPU smoke tests see one
+device and zero annotations).  The launcher installs a rules mapping
+(logical axis name -> mesh axis / None) plus the mesh, and every annotation
+becomes a ``with_sharding_constraint`` so GSPMD propagates the deployment's
+parallelism through the whole program.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def current_rules() -> tuple[Mesh, dict] | None:
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def sharding_rules(mesh: Mesh, rules: dict):
+    """Install logical->mesh axis rules for the enclosed trace."""
+    prev = getattr(_state, "rules", None)
+    _state.rules = (mesh, rules)
+    try:
+        yield
+    finally:
+        _state.rules = prev
+
+
+def spec_for(*axes: str | None) -> P:
+    ctx = current_rules()
+    if ctx is None:
+        return P()
+    _, rules = ctx
+    entries = []
+    for a in axes:
+        if a is None:
+            entries.append(None)
+        else:
+            entries.append(rules.get(a))
+    return P(*entries)
+
+
+def logical(x: jax.Array, *axes: str | None) -> jax.Array:
+    """Constrain `x` (rank == len(axes)) to the logical sharding, if rules set."""
+    ctx = current_rules()
+    if ctx is None:
+        return x
+    mesh, _ = ctx
+    spec = spec_for(*axes)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

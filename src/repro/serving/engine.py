@@ -1,0 +1,173 @@
+"""Continuous-batching serving engine (one model replica), real JAX compute.
+
+vLLM-style loop: admit prompts while KV blocks remain, run batched prefill,
+then step decode over the active set, emitting one token per sequence per
+step; finished sequences free their pages immediately.
+
+The decode step gathers pages into a dense view and reuses the model's
+``decode_step`` (exact); the Pallas flash-decode kernel consumes the same
+block-table layout directly on TPU (``repro.kernels``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import DecodeCache, decode_step, prefill
+from repro.models.config import ModelConfig
+from repro.serving.kvcache import PagedKVCache
+
+
+@dataclasses.dataclass
+class EngineRequest:
+    rid: int
+    prompt: np.ndarray           # int32 [S]
+    max_new_tokens: int
+    slot: int = -1
+    generated: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params, num_blocks: int = 512,
+                 block_size: int = 16, max_seqs: int = 8,
+                 dtype=jnp.float32, greedy: bool = True, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.cache = PagedKVCache.create(
+            cfg, num_blocks, block_size, max_seqs,
+            max_blocks_per_seq=cfg.max_seq_len // block_size, dtype=dtype)
+        self.max_seqs = max_seqs
+        self.dtype = dtype
+        self.greedy = greedy
+        self.key = jax.random.PRNGKey(seed)
+        self.waiting: list[EngineRequest] = []
+        self.active: dict[int, EngineRequest] = {}    # slot -> request
+        self.steps = 0
+        self.tokens_out = 0
+
+        self._prefill = jax.jit(
+            lambda p, toks: prefill(p, cfg, tokens=toks))
+        self._decode = jax.jit(
+            lambda p, toks, cache: decode_step(p, cfg, toks, cache))
+
+    # -- submission ------------------------------------------------------------
+
+    def submit(self, rid: int, prompt: np.ndarray, max_new_tokens: int) -> None:
+        self.waiting.append(EngineRequest(rid, np.asarray(prompt, np.int32),
+                                          max_new_tokens))
+
+    def _free_slots(self) -> list[int]:
+        return [s for s in range(self.max_seqs) if s not in self.active]
+
+    # -- scheduling ------------------------------------------------------------
+
+    def _admit(self) -> list[EngineRequest]:
+        """Move waiting requests into free slots while KV blocks remain."""
+        admitted = []
+        free = self._free_slots()
+        while self.waiting and free:
+            req = self.waiting[0]
+            if not self.cache.can_admit(len(req.prompt)):
+                break
+            self.waiting.pop(0)
+            req.slot = free.pop(0)
+            self.cache.admit(req.slot, len(req.prompt))
+            self.active[req.slot] = req
+            admitted.append(req)
+        return admitted
+
+    def _run_prefill(self, reqs: list[EngineRequest]) -> None:
+        # bucket by prompt length: same-length batches need no padding, so
+        # RoPE positions stay exact for every sequence
+        by_len: dict[int, list[EngineRequest]] = {}
+        for r in reqs:
+            by_len.setdefault(len(r.prompt), []).append(r)
+        for pl, group in by_len.items():
+            toks = np.stack([r.prompt for r in group])
+            logits, cache = self._prefill(self.params, jnp.asarray(toks))
+            for i, r in enumerate(group):
+                if self.cfg.has_attn:
+                    self.cache.write_prefill(r.slot, cache.k[:, i],
+                                             cache.v[:, i])
+                if self.cfg.has_ssm:
+                    self.cache.ssm = self.cache.ssm.at[:, r.slot].set(
+                        cache.ssm[:, i])
+                    self.cache.conv = self.cache.conv.at[:, r.slot].set(
+                        cache.conv[:, i])
+                tok = self._pick(logits[i:i + 1])[0]
+                r.generated.append(int(tok))
+                self.tokens_out += 1
+
+    def _pick(self, logits: jax.Array) -> np.ndarray:
+        from repro.models.sampling import sample
+        if self.greedy:
+            return np.asarray(sample(logits, self.cfg, self.key))
+        self.key, sub = jax.random.split(self.key)
+        return np.asarray(sample(logits, self.cfg, sub, temperature=1.0))
+
+    def _run_decode(self) -> None:
+        slots = np.array(sorted(self.active), np.int32)
+        B = len(slots)
+        lens = self.cache.seq_lens[slots].copy()
+        max_len = int(lens.max()) + 1
+        last = np.array([self.active[s].generated[-1] for s in slots], np.int32)
+        if self.cfg.has_attn:
+            k, v, _ = self.cache.gather_dense(slots, max_len)
+        else:
+            k = v = None
+        ssm = self.cache.ssm[:, slots] if self.cache.ssm is not None else None
+        conv = self.cache.conv[:, slots] if self.cache.conv is not None else None
+        dc = DecodeCache(k=k, v=v, ssm=ssm, conv=conv,
+                         pos=jnp.asarray(lens, jnp.int32))
+        logits, new_cache = self._decode(self.params, jnp.asarray(last), dc)
+        toks = self._pick(logits)
+        # persist the new KV token + SSM state back into the pool
+        for s in slots:
+            self.cache.extend(int(s))
+        if self.cfg.has_attn:
+            bidx = jnp.arange(B)
+            k_new = new_cache.k[:, bidx, jnp.asarray(lens)]   # [L, B, H, D]
+            v_new = new_cache.v[:, bidx, jnp.asarray(lens)]
+            self.cache.write_token(slots, k_new, v_new, lens)
+        if self.cfg.has_ssm:
+            self.cache.ssm = self.cache.ssm.at[:, slots].set(new_cache.ssm)
+            self.cache.conv = self.cache.conv.at[:, slots].set(new_cache.conv)
+        for i, s in enumerate(slots):
+            r = self.active[int(s)]
+            r.generated.append(int(toks[i]))
+            self.tokens_out += 1
+
+    def _retire(self) -> list[EngineRequest]:
+        done = []
+        for s in list(self.active):
+            r = self.active[s]
+            if len(r.generated) >= r.max_new_tokens:
+                r.done = True
+                self.cache.release_slot(s)
+                del self.active[s]
+                done.append(r)
+        return done
+
+    # -- main loop ---------------------------------------------------------------
+
+    def step(self) -> list[EngineRequest]:
+        """One scheduler iteration; returns requests finished this step."""
+        self.steps += 1
+        admitted = self._admit()
+        if admitted:
+            self._run_prefill(admitted)
+        elif self.active:
+            self._run_decode()
+        return self._retire()
+
+    def run_to_completion(self, max_steps: int = 100_000
+                          ) -> list[EngineRequest]:
+        finished = []
+        while (self.waiting or self.active) and self.steps < max_steps:
+            finished.extend(self.step())
+        return finished

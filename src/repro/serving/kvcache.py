@@ -1,0 +1,164 @@
+"""Paged KV cache (vLLM-style) in JAX.
+
+Storage: per layer-stacked pools ``k/v: [L, num_blocks, block_size, Hkv, D]``
+plus a host-side block allocator.  Sequences own block lists; the device-side
+``block_table [max_seqs, max_blocks_per_seq]`` maps slot x logical-block ->
+physical block.  The decode path gathers pages (jnp path here; the Pallas
+flash-decode kernel consumes the same table layout).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+
+class BlockAllocator:
+    """Host-side free-list of physical blocks (+ copy-on-write ready refcounts)."""
+
+    def __init__(self, num_blocks: int):
+        self.free = list(range(num_blocks - 1, -1, -1))
+        self.refs = np.zeros(num_blocks, np.int32)
+
+    def alloc(self, n: int) -> list[int]:
+        if len(self.free) < n:
+            raise MemoryError(f"KV pool exhausted (need {n}, "
+                              f"have {len(self.free)})")
+        out = [self.free.pop() for _ in range(n)]
+        for b in out:
+            self.refs[b] = 1
+        return out
+
+    def release(self, blocks: list[int]) -> None:
+        for b in blocks:
+            self.refs[b] -= 1
+            if self.refs[b] <= 0:
+                self.refs[b] = 0
+                self.free.append(b)
+
+    def share(self, blocks: list[int]) -> None:
+        """Prefix sharing: bump refcounts (copy-on-write on append)."""
+        for b in blocks:
+            self.refs[b] += 1
+
+    @property
+    def n_free(self) -> int:
+        return len(self.free)
+
+
+@dataclasses.dataclass
+class PagedKVCache:
+    cfg: ModelConfig
+    block_size: int
+    num_blocks: int
+    max_seqs: int
+    max_blocks_per_seq: int
+    k: jax.Array        # [L, num_blocks, block, Hkv, D]
+    v: jax.Array
+    ssm: jax.Array | None
+    conv: jax.Array | None
+    block_table: np.ndarray     # host [max_seqs, max_blocks_per_seq] int32
+    seq_lens: np.ndarray        # host [max_seqs] int32
+    allocator: BlockAllocator
+    seq_blocks: dict            # slot -> list[int]
+
+    @classmethod
+    def create(cls, cfg: ModelConfig, num_blocks: int = 256,
+               block_size: int = 16, max_seqs: int = 16,
+               max_blocks_per_seq: int = 64, dtype=jnp.float32
+               ) -> "PagedKVCache":
+        L = cfg.n_layers
+        k = v = ssm = conv = None
+        if cfg.has_attn:
+            shape = (L, num_blocks, block_size, cfg.n_kv_heads, cfg.head_dim)
+            k = jnp.zeros(shape, dtype)
+            v = jnp.zeros(shape, dtype)
+        if cfg.has_ssm:
+            from repro.models.ssm import conv_channels
+            ssm = jnp.zeros((L, max_seqs, cfg.ssm_heads, cfg.ssm_head_dim,
+                             cfg.ssm_state), jnp.float32)
+            conv = jnp.zeros((L, max_seqs, cfg.ssm_conv_width - 1,
+                              conv_channels(cfg)), dtype)
+        return cls(cfg, block_size, num_blocks, max_seqs, max_blocks_per_seq,
+                   k, v, ssm, conv,
+                   np.zeros((max_seqs, max_blocks_per_seq), np.int32),
+                   np.zeros(max_seqs, np.int32),
+                   BlockAllocator(num_blocks), {})
+
+    # -- slot lifecycle -------------------------------------------------------
+
+    def admit(self, slot: int, prompt_len: int) -> None:
+        n = (prompt_len + self.block_size - 1) // self.block_size
+        blocks = self.allocator.alloc(n)
+        self.seq_blocks[slot] = blocks
+        self.block_table[slot, :] = 0
+        self.block_table[slot, :n] = blocks
+        self.seq_lens[slot] = prompt_len
+
+    def can_admit(self, prompt_len: int, headroom_blocks: int = 2) -> bool:
+        n = (prompt_len + self.block_size - 1) // self.block_size
+        return self.allocator.n_free >= n + headroom_blocks
+
+    def extend(self, slot: int) -> None:
+        """Ensure capacity for one more token."""
+        new_len = int(self.seq_lens[slot]) + 1
+        n_have = len(self.seq_blocks[slot])
+        if new_len > n_have * self.block_size:
+            if n_have >= self.max_blocks_per_seq:
+                raise MemoryError("sequence exceeds max_blocks_per_seq")
+            b = self.allocator.alloc(1)[0]
+            self.seq_blocks[slot].append(b)
+            self.block_table[slot, n_have] = b
+        self.seq_lens[slot] = new_len
+
+    def release_slot(self, slot: int) -> None:
+        self.allocator.release(self.seq_blocks.pop(slot, []))
+        self.seq_lens[slot] = 0
+        self.block_table[slot, :] = 0
+
+    # -- device views ----------------------------------------------------------
+
+    def write_prefill(self, slot: int, k_seq: jax.Array, v_seq: jax.Array
+                      ) -> None:
+        """k_seq/v_seq: [L, S, Hkv, D] from prefill; scattered into pages."""
+        S = k_seq.shape[1]
+        bs = self.block_size
+        n = (S + bs - 1) // bs
+        pad = n * bs - S
+        if pad:
+            k_seq = jnp.pad(k_seq, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v_seq = jnp.pad(v_seq, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kb = k_seq.reshape(k_seq.shape[0], n, bs, *k_seq.shape[2:])
+        vb = v_seq.reshape(v_seq.shape[0], n, bs, *v_seq.shape[2:])
+        idx = jnp.asarray(self.seq_blocks[slot], jnp.int32)
+        self.k = self.k.at[:, idx].set(kb.astype(self.k.dtype))
+        self.v = self.v.at[:, idx].set(vb.astype(self.v.dtype))
+
+    def write_token(self, slots: np.ndarray, k_new: jax.Array,
+                    v_new: jax.Array, positions: np.ndarray) -> None:
+        """k_new/v_new: [L, B, Hkv, D] for one token per active slot."""
+        blk = self.block_table[slots, positions // self.block_size]
+        off = positions % self.block_size
+        blk = jnp.asarray(blk)
+        off = jnp.asarray(off)
+        self.k = self.k.at[:, blk, off].set(k_new.astype(self.k.dtype))
+        self.v = self.v.at[:, blk, off].set(v_new.astype(self.v.dtype))
+
+    def gather_dense(self, slots: np.ndarray, max_len: int
+                     ) -> tuple[jax.Array, jax.Array, jax.Array]:
+        """Materialize [L, B, max_len, Hkv, D] dense caches for the jnp decode
+        path (the Pallas kernel reads pages directly instead)."""
+        bs = self.block_size
+        n_blocks = (max_len + bs - 1) // bs
+        table = jnp.asarray(self.block_table[slots, :n_blocks])   # [B, n]
+        k = self.k[:, table]          # [L, B, n, bs, H, D]
+        v = self.v[:, table]
+        L, B = k.shape[0], k.shape[1]
+        k = k.reshape(L, B, n_blocks * bs, *k.shape[4:])[:, :, :max_len]
+        v = v.reshape(L, B, n_blocks * bs, *v.shape[4:])[:, :, :max_len]
+        lens = jnp.asarray(self.seq_lens[slots])
+        return k, v, lens

@@ -1,0 +1,65 @@
+"""Request routing policies.
+
+``FlowRouter`` realizes the lower-level assignment x[k][j]: per workload type
+it routes by largest-deficit (deterministic low-discrepancy realization of the
+fractional solution).  Baselines: round-robin (DeepSpeed-MII), least-loaded
+(Llumnix-style), KV/load-aware (Dynamo-style).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class FlowRouter:
+    def __init__(self, fractions: list[list[float]]):
+        """fractions[k][j]: share of type-j traffic for replica k."""
+        self.f = np.asarray(fractions, dtype=np.float64)
+        self.sent = np.zeros_like(self.f)
+        self.seen = np.zeros(self.f.shape[1])
+
+    def update(self, fractions: list[list[float]]) -> None:
+        f = np.asarray(fractions, dtype=np.float64)
+        if f.shape != self.f.shape:
+            self.sent = np.zeros_like(f)
+            self.seen = np.zeros(f.shape[1])
+        self.f = f
+
+    def route(self, type_id: int, up: np.ndarray | None = None) -> int:
+        """Pick the replica with the largest routing deficit for this type."""
+        j = type_id
+        self.seen[j] += 1
+        deficit = self.f[:, j] * self.seen[j] - self.sent[:, j]
+        if up is not None:
+            deficit = np.where(up, deficit, -np.inf)
+        k = int(np.argmax(deficit))
+        self.sent[k, j] += 1
+        return k
+
+
+class RoundRobinRouter:
+    def __init__(self, n_replicas: int):
+        self.n = n_replicas
+        self.i = 0
+
+    def update(self, n_replicas: int) -> None:
+        self.n = n_replicas
+        self.i = 0
+
+    def route(self, type_id: int, up=None) -> int:
+        for _ in range(self.n):
+            k = self.i % self.n
+            self.i += 1
+            if up is None or up[k]:
+                return k
+        return 0
+
+
+class LeastLoadedRouter:
+    """Route to the replica with the lowest normalized load (queue + running
+    work / capacity weight).  `loads` supplied by the caller each decision."""
+
+    def route_from_loads(self, loads: np.ndarray, up=None) -> int:
+        loads = np.asarray(loads, dtype=np.float64)
+        if up is not None:
+            loads = np.where(up, loads, np.inf)
+        return int(np.argmin(loads))

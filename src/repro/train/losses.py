@@ -1,0 +1,30 @@
+"""Training losses: masked cross-entropy + MoE load-balancing auxiliary."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array, cfg: ModelConfig,
+                  mask: jax.Array | None = None) -> tuple[jax.Array, dict]:
+    """logits [B,S,Vpad] fp32, labels [B,S] int32 (-1 = ignore).
+
+    Padded vocab ids are excluded from the partition function.
+    """
+    Vpad = logits.shape[-1]
+    vmask = jnp.arange(Vpad) < cfg.vocab_size
+    logits = jnp.where(vmask[None, None, :], logits, -1e30)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.clip(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    valid = (labels >= 0)
+    if mask is not None:
+        valid = valid & (mask > 0)
+    valid = valid.astype(jnp.float32)
+    denom = jnp.maximum(valid.sum(), 1.0)
+    loss = (nll * valid).sum() / denom
+    acc = ((jnp.argmax(logits, -1) == labels) * valid).sum() / denom
+    return loss, {"nll": loss, "accuracy": acc, "tokens": denom}

@@ -1,0 +1,153 @@
+"""Training step factory + loop: remat, grad accumulation, compression.
+
+``make_train_step`` builds the jit-able pure function the dry-run lowers on
+the production mesh; ``Trainer`` is the host-side loop with checkpointing and
+restart used by ``examples/train_100m.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import forward, init_params
+from repro.models.config import ModelConfig
+from repro.train.losses import cross_entropy
+from repro.train.optimizer import (AdamWConfig, adamw_update,
+                                   compress_roundtrip, init_opt_state)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    opt: AdamWConfig = AdamWConfig()
+    remat: bool = True
+    microbatches: int = 1           # gradient accumulation
+    moe_aux_weight: float = 0.01
+    grad_compression: bool = False  # int8 roundtrip around the DP all-reduce
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.bfloat16
+
+
+def cast_for_compute(params, dtype):
+    """fp32 master params -> bf16 compute copies (2D+ leaves only; 1D gains,
+    SSM dt/A/D stay fp32 for numerics)."""
+    return jax.tree.map(
+        lambda p: p.astype(dtype)
+        if (p.ndim >= 2 and p.dtype == jnp.float32) else p, params)
+
+
+def loss_fn(params, cfg: ModelConfig, batch, tcfg: TrainConfig):
+    params = cast_for_compute(params, tcfg.compute_dtype)
+    tokens = batch.get("tokens")
+    embeds = batch.get("embeds")
+    labels = batch["labels"]
+    if cfg.is_moe:
+        logits, aux = forward(params, cfg, tokens, embeds,
+                              remat=tcfg.remat, with_aux=True)
+    else:
+        logits = forward(params, cfg, tokens, embeds, remat=tcfg.remat)
+        aux = jnp.zeros((), jnp.float32)
+    loss, metrics = cross_entropy(logits, labels, cfg)
+    total = loss + tcfg.moe_aux_weight * aux
+    metrics["aux_loss"] = aux
+    return total, metrics
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig | None = None
+                    ) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    state = {"params": ..., "opt": ...}; batch leaves have leading
+    [global_batch, seq] (sharded by the caller's in_shardings).
+    """
+    tcfg = tcfg or TrainConfig()
+
+    def single_grads(params, batch):
+        (_, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, cfg, batch, tcfg)
+        return grads, metrics
+
+    def train_step(state, batch):
+        params = state["params"]
+        if tcfg.microbatches > 1:
+            def micro(carry, mb):
+                g_acc, m_acc = carry
+                g, m = single_grads(params, mb)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                m_acc = jax.tree.map(jnp.add, m_acc, m)
+                return (g_acc, m_acc), None
+
+            split = jax.tree.map(
+                lambda x: x.reshape((tcfg.microbatches,
+                                     x.shape[0] // tcfg.microbatches)
+                                    + x.shape[1:]), batch)
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            g0, m0 = single_grads(jax.tree.map(lambda x: x, params),
+                                  jax.tree.map(lambda x: x[0], split))
+            rest = jax.tree.map(lambda x: x[1:], split)
+            (grads, metrics), _ = jax.lax.scan(micro, (g0, m0), rest)
+            grads = jax.tree.map(lambda g: g / tcfg.microbatches, grads)
+            metrics = jax.tree.map(lambda m: m / tcfg.microbatches, metrics)
+        else:
+            grads, metrics = single_grads(params, batch)
+        if tcfg.grad_compression:
+            grads = compress_roundtrip(grads)
+        new_params, new_opt, opt_metrics = adamw_update(
+            params, grads, state["opt"], tcfg.opt)
+        metrics.update(opt_metrics)
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def init_train_state(cfg: ModelConfig, key: jax.Array,
+                     tcfg: TrainConfig | None = None) -> dict:
+    tcfg = tcfg or TrainConfig()
+    params = init_params(cfg, key, tcfg.param_dtype)
+    return {"params": params, "opt": init_opt_state(params)}
+
+
+class Trainer:
+    """Host loop: data -> step -> metrics -> periodic checkpoint, with
+    resume-from-latest restart (fault tolerance)."""
+
+    def __init__(self, cfg: ModelConfig, tcfg: TrainConfig,
+                 data_iter, checkpoint_dir: str | None = None,
+                 checkpoint_every: int = 50, seed: int = 0):
+        from repro.train.checkpoint import CheckpointManager
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.data_iter = data_iter
+        self.step_fn = jax.jit(make_train_step(cfg, tcfg), donate_argnums=0)
+        self.ckpt = (CheckpointManager(checkpoint_dir)
+                     if checkpoint_dir else None)
+        self.checkpoint_every = checkpoint_every
+        self.state = init_train_state(cfg, jax.random.PRNGKey(seed), tcfg)
+        self.step = 0
+        if self.ckpt is not None:
+            restored = self.ckpt.restore_latest(self.state)
+            if restored is not None:
+                self.state, self.step = restored
+
+    def run(self, steps: int, log_every: int = 10) -> list[dict]:
+        history = []
+        t0 = time.time()
+        for _ in range(steps):
+            batch = next(self.data_iter)
+            self.state, metrics = self.step_fn(self.state, batch)
+            self.step += 1
+            if self.step % log_every == 0 or self.step == 1:
+                m = {k: float(v) for k, v in metrics.items()}
+                m["step"] = self.step
+                m["wall"] = time.time() - t0
+                history.append(m)
+            if self.ckpt is not None and self.step % self.checkpoint_every == 0:
+                self.ckpt.save(self.state, self.step)
+        if self.ckpt is not None:
+            self.ckpt.save(self.state, self.step)
+            self.ckpt.wait()
+        return history

@@ -1,0 +1,127 @@
+"""Max-flow / LP / flow-network unit + property tests."""
+import math
+import random
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.flownet import (WorkloadFlowNetwork, maxflow_edmonds_karp,
+                                maxflow_preflow_push, simplex_maximize)
+
+
+def random_graph(rng, n_max=10, e_max=25, c_max=20):
+    n = rng.randint(2, n_max)
+    edges = []
+    for _ in range(rng.randint(0, e_max)):
+        u, v = rng.randrange(n), rng.randrange(n)
+        if u != v:
+            edges.append((u, v, rng.randint(0, c_max)))
+    return n, edges
+
+
+def test_preflow_push_matches_edmonds_karp():
+    rng = random.Random(1)
+    for _ in range(150):
+        n, edges = random_graph(rng)
+        f1, per = maxflow_preflow_push(n, edges, 0, n - 1)
+        f2 = maxflow_edmonds_karp(n, edges, 0, n - 1)
+        assert f1 == f2
+
+
+def test_preflow_push_returns_valid_flow():
+    rng = random.Random(2)
+    for _ in range(150):
+        n, edges = random_graph(rng)
+        f, per = maxflow_preflow_push(n, edges, 0, n - 1)
+        net = [0] * n
+        for (u, v, c), fl in zip(edges, per):
+            assert 0 <= fl <= c
+            net[u] -= fl
+            net[v] += fl
+        for v in range(1, n - 1):
+            assert net[v] == 0
+        assert net[n - 1] == f
+
+
+def test_simplex_known_solution():
+    x, val = simplex_maximize([1, 1], [[1, 0], [0, 1], [1, 1]], [2, 3, 4])
+    assert abs(val - 4.0) < 1e-8
+
+
+def test_simplex_degenerate_ok():
+    # degenerate constraints (Bland's rule must not cycle)
+    x, val = simplex_maximize([1, 1, 1],
+                              [[1, 1, 0], [0, 1, 1], [1, 0, 1],
+                               [1, 1, 1]],
+                              [1, 1, 1, 1.5])
+    assert val <= 1.5 + 1e-9
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(1, 4), st.integers(1, 4), st.integers(0, 10_000))
+def test_lp_feasibility_and_bounds(K, J, seed):
+    """Solution respects C1-C3 and is demand/capacity bounded."""
+    rng = np.random.RandomState(seed)
+    rates = rng.uniform(0, 100, J).tolist()
+    n = rng.uniform(0, 80, (K, J))
+    n[rng.rand(K, J) < 0.2] = 0.0
+    net = WorkloadFlowNetwork(rates, n.tolist())
+    sol = net.solve()
+    x = np.array(sol.x)
+    assert (x >= -1e-6).all()
+    # C1
+    assert (x.sum(0) <= np.array(rates) + 1e-6).all()
+    # C2/C3
+    for k in range(K):
+        u = sum(x[k][j] / n[k][j] for j in range(J) if n[k][j] > 0)
+        assert u <= 1.0 + 1e-6
+        for j in range(J):
+            if n[k][j] == 0:
+                assert x[k][j] <= 1e-9
+    assert sol.throughput <= sum(rates) + 1e-6
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(2, 4), st.integers(1, 4), st.integers(0, 10_000))
+def test_balance_preserves_totals_and_reduces_max_util(K, J, seed):
+    rng = np.random.RandomState(seed)
+    rates = rng.uniform(10, 100, J).tolist()
+    n = rng.uniform(10, 80, (K, J))
+    net = WorkloadFlowNetwork(rates, n.tolist())
+    sol = net.solve()
+    bal = net.balance(sol)
+    assert abs(bal.throughput - sol.throughput) < 1e-4 * max(sol.throughput, 1)
+    assert max(bal.utilization) <= max(sol.utilization) + 1e-6
+    # per-type totals preserved
+    for j in range(J):
+        t0 = sum(sol.x[k][j] for k in range(K))
+        t1 = sum(bal.x[k][j] for k in range(K))
+        assert abs(t0 - t1) < 1e-4 * max(t0, 1.0)
+
+
+def test_unit_uniform_uses_preflow_push():
+    # one workload type -> exact standard max-flow instance
+    net = WorkloadFlowNetwork([100.0], [[30.0], [50.0]])
+    sol = net.solve()
+    assert sol.solver == "preflow_push"
+    assert abs(sol.throughput - 80.0) < 1e-9
+
+
+def test_lcm_normalization():
+    net = WorkloadFlowNetwork([10, 10], [[80, 50], [40, 40]])
+    assert net.M[0] == 400
+    assert net.m_units[0] == [5, 8]
+    assert net.M[1] == 40
+
+
+def test_appendix_d_example():
+    """Paper Appendix D case 3: 150 requests complete by ~13.67s."""
+    horizon = 13.67
+    net = WorkloadFlowNetwork(
+        [100.0, 50.0],
+        [[10 * horizon, 5 * horizon],
+         [5 * horizon, 3 * horizon],
+         [5 * horizon, 3 * horizon]])
+    sol = net.solve()
+    assert sol.throughput >= 149.9

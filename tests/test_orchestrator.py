@@ -1,0 +1,70 @@
+"""Orchestrator control loop: span planning, switching, fault tolerance."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.costmodel import CostModel
+from repro.core.orchestrator import Orchestrator, OrchestratorConfig
+from repro.core.types import ClusterSpec, H100_SPEC, WorkloadType
+
+ARCH = [WorkloadType(1275, 287), WorkloadType(139, 133),
+        WorkloadType(1181, 1824), WorkloadType(282, 1121)]
+
+
+@pytest.fixture()
+def orch():
+    cm = CostModel(get_config("opt-30b").profile(), hw=H100_SPEC)
+    return Orchestrator(cm, ClusterSpec(16, hw=H100_SPEC))
+
+
+def ws(rates):
+    return [a.with_rate(float(r)) for a, r in zip(ARCH, rates)]
+
+
+def test_first_span_plans_deployment(orch):
+    plan = orch.plan_span(ws([50, 600, 30, 60]))
+    assert plan.deployment.total_chips == 16
+    assert plan.switch_seconds == 0.0       # nothing to transfer yet
+    f = np.array(plan.fractions)
+    assert (f >= -1e-9).all() and (f.sum(0) <= 1.0 + 1e-6).all()
+
+
+def test_stable_workload_no_switch(orch):
+    p1 = orch.plan_span(ws([50, 600, 30, 60]))
+    p2 = orch.plan_span(ws([52, 590, 31, 62]))
+    assert p2.deployment == p1.deployment
+    assert p2.changed_replicas == []
+
+
+def test_switch_cost_less_than_reload(orch):
+    orch.plan_span(ws([50, 2000, 30, 60]))
+    # drastic regime change at saturating rates to force a re-deployment
+    plan = orch.plan_span(ws([40, 60, 1500, 900]))
+    assert plan.reload_seconds > 10.0
+    if plan.changed_replicas:
+        assert plan.switch_seconds < plan.reload_seconds / 3
+
+
+def test_failure_replans_on_survivors(orch):
+    orch.plan_span(ws([50, 600, 30, 60]))
+    plan = orch.on_cluster_change(12, ws([50, 600, 30, 60]))
+    assert plan.deployment.total_chips == 12
+    assert max(c for rep in plan.placed.replicas for c in rep.chips) < 12
+
+
+def test_elastic_grow(orch):
+    orch.plan_span(ws([50, 600, 30, 60]))
+    plan = orch.on_cluster_change(24, ws([50, 600, 30, 60]))
+    assert plan.deployment.total_chips == 24
+
+
+def test_straggler_health_shifts_flow(orch):
+    p1 = orch.plan_span(ws([100, 3000, 200, 300]))
+    if p1.deployment.dp < 2:
+        pytest.skip("single-replica deployment; nothing to shift")
+    orch.observe_health([0.2] + [1.0] * (p1.deployment.dp - 1))
+    p2 = orch.plan_span(ws([100, 3000, 200, 300]))
+    if p2.deployment == p1.deployment:
+        f1 = np.array(p1.fractions)
+        f2 = np.array(p2.fractions)
+        assert f2[0].sum() <= f1[0].sum() + 1e-6

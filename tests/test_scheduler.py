@@ -1,0 +1,101 @@
+"""Cost model, assignment, and deployment-search behaviour tests."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.assignment import assign_workloads
+from repro.core.costmodel import CostModel
+from repro.core.deployment import (enumerate_deployments, exhaustive_search,
+                                   flow_guided_search, uniform_initial)
+from repro.core.types import (ClusterSpec, Deployment, H100_SPEC,
+                              ReplicaConfig, WorkloadType, valid_strategies)
+
+ARCH = [WorkloadType(1275, 287), WorkloadType(139, 133),
+        WorkloadType(1181, 1824), WorkloadType(282, 1121)]
+
+
+@pytest.fixture(scope="module")
+def cm():
+    return CostModel(get_config("opt-30b").profile(), hw=H100_SPEC)
+
+
+def test_valid_strategies_factorizations():
+    s = valid_strategies(12, max_tp=8, max_pp=4)
+    assert ReplicaConfig(6, 2) in s
+    assert ReplicaConfig(3, 4) in s
+    assert all(r.tp * r.pp == 12 for r in s)
+    assert all(r.tp <= 8 and r.pp <= 4 for r in s)
+
+
+def test_cost_model_monotonicity(cm):
+    """More chips -> no worse throughput; longer outputs -> lower throughput."""
+    w = ARCH[1]
+    t2 = cm.capacity(ReplicaConfig(2), w)
+    t4 = cm.capacity(ReplicaConfig(4), w)
+    t8 = cm.capacity(ReplicaConfig(8), w)
+    assert t2 < t4 < t8 * 1.2
+    short, long_ = ARCH[1], ARCH[2]
+    assert (cm.capacity(ReplicaConfig(8), short)
+            > cm.capacity(ReplicaConfig(8), long_))
+
+
+def test_cost_model_min_chips(cm):
+    assert cm.min_chips() >= 1
+    assert not cm.fits(ReplicaConfig(1))   # 30B bf16 > one 80GB H100 * 0.9
+
+
+def test_dp_vs_tp_tradeoff(cm):
+    """The Fig-1 pattern: DP-sliced favors short/compute workloads,
+    consolidation favors long/memory workloads."""
+    short, long_ = ARCH[1], ARCH[2]
+    dp_short = 4 * cm.capacity(ReplicaConfig(2), short)
+    tp_short = cm.capacity(ReplicaConfig(8), short)
+    dp_long = 4 * cm.capacity(ReplicaConfig(2), long_)
+    tp_long = cm.capacity(ReplicaConfig(8), long_)
+    assert (dp_short / tp_short) > (dp_long / tp_long)
+
+
+def test_assignment_respects_demand(cm):
+    dep = Deployment((ReplicaConfig(8), ReplicaConfig(8)))
+    ws = [a.with_rate(10.0) for a in ARCH]
+    res = assign_workloads(cm, dep, ws)
+    assert res.throughput <= 40.0 + 1e-6
+    x = np.array(res.solution.x)
+    assert (x.sum(0) <= 10.0 + 1e-6).all()
+
+
+def test_capacity_scale_reroutes(cm):
+    """Straggler mitigation: degrading one replica moves its flow away."""
+    dep = Deployment((ReplicaConfig(8), ReplicaConfig(8)))
+    ws = [a.with_rate(1000.0) for a in ARCH]
+    healthy = assign_workloads(cm, dep, ws)
+    degraded = assign_workloads(cm, dep, ws, capacity_scale=[1.0, 0.3])
+    x_h = np.array(healthy.solution.x)
+    x_d = np.array(degraded.solution.x)
+    assert x_d[1].sum() < x_h[1].sum()
+    assert degraded.throughput <= healthy.throughput + 1e-6
+
+
+def test_enumerate_deployments_cover_chips(cm):
+    deps = enumerate_deployments(16, cm.min_chips(), max_tp=8, max_pp=4)
+    assert deps
+    assert all(d.total_chips == 16 for d in deps)
+
+
+def test_flow_guided_close_to_exhaustive(cm):
+    ws = [a.with_rate(2000.0) for a in ARCH]
+    ex = exhaustive_search(cm, 8, ws, max_tp=8, max_pp=4)
+    fg = flow_guided_search(cm, 8, ws, max_tp=8, max_pp=4, seed=0)
+    assert fg.throughput >= 0.90 * ex.throughput
+
+
+def test_uniform_initial_fills_cluster(cm):
+    dep = uniform_initial(cm, 16, max_tp=8, max_pp=4)
+    assert dep.total_chips == 16
+
+
+def test_search_deterministic(cm):
+    ws = [a.with_rate(500.0) for a in ARCH]
+    a = flow_guided_search(cm, 16, ws, seed=3)
+    b = flow_guided_search(cm, 16, ws, seed=3)
+    assert a.deployment == b.deployment

@@ -1,0 +1,127 @@
+"""Greedy switch planner (Algorithm 2) property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core.costmodel import CostModel
+from repro.core.switching import (PlacedDeployment, place_deployment,
+                                  plan_kv_migration, plan_switch)
+from repro.core.types import (ClusterSpec, Deployment, ReplicaConfig,
+                              TPU_V5E_SPEC, valid_strategies)
+
+
+@pytest.fixture(scope="module")
+def cm():
+    return CostModel(get_config("opt-66b").profile())
+
+
+def deployments_of(chips, sizes_strats):
+    return Deployment(tuple(ReplicaConfig(tp, pp) for tp, pp in sizes_strats))
+
+
+def coverage(plan, placed_dst, cm):
+    """Every target device's rectangle must be fully paid for."""
+    total_needed = sum(1.0 for rep in placed_dst.replicas
+                      for _ in rep.chips) * 0  # placeholder
+    needed_bytes = sum(
+        cm.p.param_bytes / (rep.config.tp * rep.config.pp)
+        for rep in placed_dst.replicas for _ in rep.chips)
+    supplied = plan.moved_bytes() + plan.local_bytes + plan.host_bytes
+    return needed_bytes, supplied
+
+
+CASES = [
+    ([(8, 2)], [(4, 2), (4, 2)]),
+    ([(2, 1)] * 8, [(8, 1), (8, 1)]),
+    ([(8, 1), (4, 1), (4, 1)], [(4, 2), (4, 2)]),
+    ([(3, 2), (2, 1), (8, 1)], [(8, 2)]),       # non-power-of-two TP=3
+]
+
+
+@pytest.mark.parametrize("src,dst", CASES)
+def test_plan_covers_all_target_shards(cm, src, dst):
+    cluster = ClusterSpec(16)
+    ps = place_deployment(deployments_of(16, src), cluster)
+    pd = place_deployment(deployments_of(16, dst), cluster)
+    plan = plan_switch(ps, pd, cm)
+    needed, supplied = coverage(plan, pd, cm)
+    assert abs(needed - supplied) < 1e-3 * needed
+    assert plan.host_bytes == 0.0        # sources exist for every grain
+
+
+@pytest.mark.parametrize("src,dst", CASES)
+def test_switch_beats_reload(cm, src, dst):
+    cluster = ClusterSpec(16)
+    ps = place_deployment(deployments_of(16, src), cluster)
+    pd = place_deployment(deployments_of(16, dst), cluster)
+    plan = plan_switch(ps, pd, cm)
+    assert plan.estimate_seconds(TPU_V5E_SPEC) < cm.reload_seconds() / 3
+
+
+def test_identity_switch_is_free(cm):
+    cluster = ClusterSpec(16)
+    dep = deployments_of(16, [(8, 1), (8, 1)])
+    ps = place_deployment(dep, cluster)
+    plan = plan_switch(ps, ps, cm)
+    assert plan.moved_bytes() == 0.0
+    assert plan.local_bytes > 0.0
+
+
+def test_intra_pod_preferred(cm):
+    """All chips in one pod -> every transfer must be intra-pod."""
+    cluster = ClusterSpec(16)   # 16 < 256 chips/pod
+    ps = place_deployment(deployments_of(16, [(8, 2)]), cluster)
+    pd = place_deployment(deployments_of(16, [(4, 2), (4, 2)]), cluster)
+    plan = plan_switch(ps, pd, cm)
+    assert all(t.intra_pod for t in plan.transfers)
+
+
+def test_load_balanced_sources(cm):
+    """Greedy balancing: no source sends more than ~3x the mean."""
+    cluster = ClusterSpec(16)
+    ps = place_deployment(deployments_of(16, [(2, 1)] * 8), cluster)
+    pd = place_deployment(deployments_of(16, [(8, 1), (8, 1)]), cluster)
+    plan = plan_switch(ps, pd, cm)
+    per_src = {}
+    for t in plan.transfers:
+        per_src[t.src] = per_src.get(t.src, 0.0) + t.bytes
+    loads = np.array(list(per_src.values()))
+    assert loads.max() <= 3.0 * loads.mean() + 1e-6
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000))
+def test_random_transitions_cover(cm, seed):
+    rng = np.random.RandomState(seed)
+    cluster = ClusterSpec(16)
+
+    def random_dep():
+        remaining = 16
+        reps = []
+        while remaining >= 2:
+            size = int(rng.choice([s for s in (2, 3, 4, 6, 8, remaining)
+                                   if s <= remaining]))
+            strats = valid_strategies(size, max_tp=8, max_pp=4)
+            if not strats:
+                break
+            reps.append(strats[rng.randint(len(strats))])
+            remaining -= size
+        return Deployment(tuple(reps))
+
+    src, dst = random_dep(), random_dep()
+    if not src.replicas or not dst.replicas:
+        return
+    ps = place_deployment(src, cluster)
+    pd = place_deployment(dst, cluster)
+    plan = plan_switch(ps, pd, cm)
+    needed, supplied = coverage(plan, pd, cm)
+    assert abs(needed - supplied) < 1e-3 * max(needed, 1.0)
+
+
+def test_kv_migration_split(cm):
+    plan = plan_kv_migration(cm, {1: 100, 2: 3000, 3: 8000},
+                             drain_threshold=2048)
+    assert plan.drained == [1]
+    assert {r for r, _ in plan.migrated} == {2, 3}
+    assert plan.moved_bytes() > 0
