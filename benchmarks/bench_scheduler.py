@@ -8,8 +8,6 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
-
 from repro.configs import get_config
 from repro.core.costmodel import CostModel
 from repro.core.deployment import exhaustive_search, flow_guided_search

@@ -39,7 +39,6 @@ class Bench:
                            for c in self.clusterer.raw_centroids]
         # Paper protocol: per-span arrival rates track the mix-dependent
         # cluster capacity (neither over- nor under-utilized at any time).
-        from repro.serving.request import trace_mixes
         probe_spans = np.array([span_of(r) for r in probe])
         probe_labels = self.clusterer.assign(il, ol)
         pc = count_series(probe_labels, probe_spans, k_types, n_spans)

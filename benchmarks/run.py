@@ -9,6 +9,7 @@ variants (all models/cluster sizes); default keeps CI-friendly settings.
   bench_scheduler  Fig 15     heuristic vs exhaustive search
   bench_ablation   Fig 14/AppD heterogeneous deployment + flow assignment
   bench_roofline   SRoofline  three-term roofline per (arch x shape)
+  bench_engine     S4 engine  paged fused decode vs dense-gather decode
 """
 from __future__ import annotations
 
@@ -17,7 +18,7 @@ import sys
 import time
 
 MODULES = ["bench_predictor", "bench_scheduler", "bench_ablation",
-           "bench_switching", "bench_e2e", "bench_roofline"]
+           "bench_switching", "bench_e2e", "bench_roofline", "bench_engine"]
 
 
 def main() -> None:

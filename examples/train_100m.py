@@ -14,8 +14,6 @@ config (slow on CPU, the intended shape for a single TPU host).
 import argparse
 import dataclasses
 
-import jax.numpy as jnp
-
 from repro.configs import get_config
 from repro.data.pipeline import DataConfig, packed_batches
 from repro.train.optimizer import AdamWConfig

@@ -22,7 +22,7 @@ import dataclasses
 import math
 from functools import lru_cache
 
-from repro.core.types import ClusterSpec, HardwareSpec, ReplicaConfig, WorkloadType
+from repro.core.types import HardwareSpec, ReplicaConfig, WorkloadType
 
 BF16 = 2  # bytes
 

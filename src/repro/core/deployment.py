@@ -19,7 +19,7 @@ import random
 
 from repro.core.assignment import AssignmentResult, assign_workloads
 from repro.core.costmodel import CostModel
-from repro.core.types import Deployment, ReplicaConfig, WorkloadType, valid_strategies
+from repro.core.types import Deployment, WorkloadType, valid_strategies
 
 
 @dataclasses.dataclass

@@ -15,7 +15,6 @@ trained with a self-contained Adam), sized so training takes seconds on CPU.
 from __future__ import annotations
 
 import dataclasses
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -73,16 +73,38 @@ def flash_decode(q, k, v, lens, *, softcap=0.0, block_k=128,
 
 @functools.partial(jax.jit, static_argnames=("softcap", "interpret"))
 def flash_decode_paged(q, k_pages, v_pages, block_table, lens, *,
-                       softcap=0.0, interpret=False):
-    """q [B,Hq,D]; pages [P,page,Hkv,D]; block_table [B,max_pages]; lens [B]."""
+                       start=None, softcap=0.0, interpret=False):
+    """q [B,Hq,D]; pages [P,page,Hkv,D]; block_table [B,max_pages]; lens [B];
+    start [B] optional lower position bound (local attention)."""
     D = q.shape[-1]
     qp = _pad_axis(q, 128, 2)
     kp = _pad_axis(k_pages, 128, 3)
     vp = _pad_axis(v_pages, 128, 3)
-    out = _fd.flash_decode_paged(qp, kp, vp, block_table, lens,
+    out = _fd.flash_decode_paged(qp, kp, vp, block_table, lens, start=start,
                                  softcap=softcap, scale=1.0 / (D ** 0.5),
                                  interpret=interpret)
     return out[:, :, :D]
+
+
+# Kernel-native pools ([P, Hkv, page, D], pre-padded head_dim) go through
+# flash_decode.flash_decode_paged_native directly — a padding wrapper here
+# would copy the whole pool per call, which the native layout exists to avoid.
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "interpret"))
+def flash_decode_paged_batch(q, k_pages, v_pages, block_table, lens, *,
+                             start=None, softcap=0.0, interpret=False):
+    """Multi-layer paged decode: q [L,B,Hq,D]; pages [L,P,Hkv,page,D]
+    (kernel-native layout); one pallas_call per layer, reshapes hoisted."""
+    D = q.shape[-1]
+    qp = _pad_axis(q, 128, 3)
+    kp = _pad_axis(k_pages, 128, 4)
+    vp = _pad_axis(v_pages, 128, 4)
+    out = _fd.flash_decode_paged_batch(qp, kp, vp, block_table, lens,
+                                       start=start, softcap=softcap,
+                                       scale=1.0 / (D ** 0.5),
+                                       interpret=interpret)
+    return out[..., :D]
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

@@ -38,8 +38,8 @@ def flash_attention_ref(q, k, v, *, causal=True, softcap=0.0, window=0):
                       ).astype(q.dtype)
 
 
-def flash_decode_ref(q, k, v, lens, *, softcap=0.0):
-    """q: [B, Hq, D]; k/v: [B, S, Hkv, D]; lens [B]."""
+def flash_decode_ref(q, k, v, lens, *, softcap=0.0, start=None):
+    """q: [B, Hq, D]; k/v: [B, S, Hkv, D]; lens [B]; start [B] lower bound."""
     B, Hq, D = q.shape
     S = k.shape[1]
     k = _expand(k, Hq)
@@ -48,7 +48,10 @@ def flash_decode_ref(q, k, v, lens, *, softcap=0.0):
                    k.astype(jnp.float32)) / (D ** 0.5)
     if softcap > 0:
         s = softcap * jnp.tanh(s / softcap)
-    ok = jnp.arange(S)[None, None, :] < lens[:, None, None]
+    pos = jnp.arange(S)[None, None, :]
+    ok = pos < lens[:, None, None]
+    if start is not None:
+        ok = ok & (pos >= start[:, None, None])
     s = jnp.where(ok, s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bhk,bkhd->bhd", p, v.astype(jnp.float32)
@@ -56,16 +59,14 @@ def flash_decode_ref(q, k, v, lens, *, softcap=0.0):
 
 
 def flash_decode_paged_ref(q, k_pages, v_pages, block_table, lens, *,
-                           softcap=0.0):
+                           softcap=0.0, start=None):
     """Gather pages into a dense cache, then dense decode."""
-    B = q.shape[0]
-    page = k_pages.shape[1]
     k = k_pages[block_table]          # [B, max_pages, page, Hkv, D]
     v = v_pages[block_table]
     B_, n, p, H, D = k.shape
     k = k.reshape(B_, n * p, H, D)
     v = v.reshape(B_, n * p, H, D)
-    return flash_decode_ref(q, k, v, lens, softcap=softcap)
+    return flash_decode_ref(q, k, v, lens, softcap=softcap, start=start)
 
 
 def ssd_chunk_ref(x, dt, A, B_, C_):

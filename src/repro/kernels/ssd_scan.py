@@ -11,12 +11,9 @@ padded to 128 by ops.py).
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 
 def _ssd_kernel(x_ref, dt_ref, B_ref, C_ref, A_ref, y_ref, s_ref):

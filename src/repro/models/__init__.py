@@ -1,7 +1,9 @@
 from repro.models.config import ModelConfig  # noqa: F401
 from repro.models.model import (  # noqa: F401
     DecodeCache,
+    PagedDecodeState,
     decode_step,
+    decode_step_paged,
     forward,
     init_cache,
     init_params,

@@ -147,6 +147,92 @@ def full_attention(x: jax.Array, p: dict, cfg: ModelConfig,
     return out @ p["wo"]
 
 
+def paged_attention_jnp(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                        block_table: jax.Array, lens: jax.Array,
+                        start: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """jnp reference paged attention (CPU / interpret fallback).
+
+    q: [B, Hq, D]; k_pages/v_pages: [P, Hkv, page, D] (kernel-native layout);
+    block_table: [B, n_pages]; lens: [B] #positions attended (incl. current
+    token); start: [B] lower position bound.  Returns [B, Hq, D].
+
+    The gather stays in native layout; the score/mask/softmax math is the
+    shared oracle (``ref.flash_decode_ref``), so dense, paged, and kernel
+    paths all agree token-for-token under greedy decode.
+    """
+    from repro.kernels.ref import flash_decode_ref
+    B = q.shape[0]
+    k = k_pages[block_table]                # [B, n, Hkv, page, D]
+    v = v_pages[block_table]
+    _, n, Hkv, page, D = k.shape
+    k = jnp.moveaxis(k, 3, 2).reshape(B, n * page, Hkv, D)
+    v = jnp.moveaxis(v, 3, 2).reshape(B, n * page, Hkv, D)
+    k, v = k[..., :cfg.head_dim], v[..., :cfg.head_dim]   # drop head_pad
+    return flash_decode_ref(q, k, v, lens, start=start,
+                            softcap=float(cfg.attn_logit_softcap))
+
+
+def paged_decode_attention(x: jax.Array, p: dict, cfg: ModelConfig,
+                           k_pages: jax.Array, v_pages: jax.Array,
+                           block_table: jax.Array, lens: jax.Array,
+                           is_local: jax.Array | bool = False, *,
+                           impl: str = "jnp", interpret: bool = False
+                           ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One decode step directly against the paged KV pool (gather-free).
+
+    Args:
+      x: [B, 1, d_model] current token embedding.
+      k_pages / v_pages: [P, Hkv, page, D] one layer's pool, kernel-native
+        layout; the new K/V token is scattered into its page in place.
+      block_table: [B, n_pages] physical page ids (padded rows may point at
+        a trash page — the scatter then lands there harmlessly).
+      lens: [B] number of tokens already cached; the new token is written at
+        position ``lens`` and attention covers [start, lens+1).
+      impl: "kernel" routes through the Pallas paged kernel, "jnp" uses the
+        gathered reference path (exact vs the dense decode path).
+    Returns: (attn_out [B, 1, d_model], new k_pages, new v_pages)
+    """
+    B = x.shape[0]
+    pos = lens
+    q, k_new, v_new = _project_qkv(x, p, cfg, pos[:, None])
+    page = k_pages.shape[2]
+    Hkv = k_pages.shape[1]
+    dpad = k_pages.shape[-1] - cfg.head_dim   # pool head_pad (kernel path)
+    kn, vn = k_new[:, 0], v_new[:, 0]
+    if dpad:
+        kn = jnp.pad(kn, ((0, 0), (0, 0), (0, dpad)))
+        vn = jnp.pad(vn, ((0, 0), (0, 0), (0, dpad)))
+    pid = block_table[jnp.arange(B), pos // page]         # [B]
+    off = pos % page
+    hidx = jnp.arange(Hkv)[None, :]
+    k_pages = k_pages.at[pid[:, None], hidx, off[:, None]].set(
+        kn.astype(k_pages.dtype))
+    v_pages = v_pages.at[pid[:, None], hidx, off[:, None]].set(
+        vn.astype(v_pages.dtype))
+
+    len_att = pos + 1
+    if cfg.local_window > 0:
+        lo = jnp.maximum(len_att - cfg.local_window, 0)
+        start = jnp.where(jnp.asarray(is_local), lo, 0)
+    else:
+        start = jnp.zeros_like(len_att)
+    if impl == "kernel":
+        from repro.kernels import flash_decode as _fd
+        qk = q[:, 0]
+        if dpad:                      # pool is pre-padded; pad q alone
+            qk = jnp.pad(qk, ((0, 0), (0, 0), (0, dpad)))
+        out = _fd.flash_decode_paged_native(
+            qk, k_pages, v_pages, block_table, len_att, start=start,
+            softcap=float(cfg.attn_logit_softcap),
+            scale=1.0 / np.sqrt(cfg.head_dim),
+            interpret=interpret)[..., :cfg.head_dim]
+    else:
+        out = paged_attention_jnp(q[:, 0], k_pages, v_pages, block_table,
+                                  len_att, start, cfg)
+    out = out.reshape(B, 1, cfg.q_dim)
+    return out @ p["wo"], k_pages, v_pages
+
+
 def decode_attention(x: jax.Array, p: dict, cfg: ModelConfig,
                      k_cache: jax.Array, v_cache: jax.Array,
                      pos: jax.Array, is_local: jax.Array | bool = False

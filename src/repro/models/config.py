@@ -8,7 +8,6 @@ providing precomputed embeddings/token ids per the assignment).
 from __future__ import annotations
 
 import dataclasses
-import math
 
 from repro.core.costmodel import ModelProfile
 

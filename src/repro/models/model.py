@@ -50,6 +50,26 @@ class DecodeCache:
     pos: Any    # [B] int32: number of tokens already in the cache
 
 
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["k", "v", "block_table", "lens", "ssm", "conv"],
+    meta_fields=[],
+)
+@dataclasses.dataclass
+class PagedDecodeState:
+    """Device-resident paged decode state (one jitted step's working set).
+
+    The K/V pools stay in kernel-native layout so the Pallas paged kernel
+    (and the jnp fallback) read pages without per-step transposes.
+    """
+    k: Any            # [L, P, Hkv, page, D] paged pool or None
+    v: Any
+    block_table: Any  # [B, n_pages] int32 physical page ids
+    lens: Any         # [B] int32 tokens already cached per sequence
+    ssm: Any          # [L, B, H, P, N] fp32 or None
+    conv: Any         # [L, B, W-1, conv_ch] or None
+
+
 def init_cache(cfg: ModelConfig, batch: int, max_len: int,
                dtype=jnp.bfloat16) -> DecodeCache:
     L = cfg.n_layers
@@ -123,13 +143,22 @@ def param_count(params) -> int:
 
 
 def _mixer(x, bp, cfg: ModelConfig, layer_idx, positions, mode,
-           kv=None, ssm_state=None, conv=None, pos=None):
-    """Token mixing: attention and/or SSM.  Returns (out, new_kv, new_ssm_pair)."""
+           kv=None, ssm_state=None, conv=None, pos=None, paged=None):
+    """Token mixing: attention and/or SSM.  Returns (out, new_kv, new_ssm_pair).
+
+    ``paged`` (decode only): dict with ``table`` [B, n_pages] plus static
+    ``impl``/``interpret`` — routes attention through the paged KV pool
+    (kv holds the layer's page pools) instead of a dense cache.
+    """
     is_local = (layer_idx % 2 == 0) if cfg.local_window > 0 else False
     attn_out = None
     new_k = new_v = None
     if cfg.has_attn:
-        if mode == "decode":
+        if mode == "decode" and paged is not None:
+            attn_out, new_k, new_v = attn_lib.paged_decode_attention(
+                x, bp["attn"], cfg, kv[0], kv[1], paged["table"], pos,
+                is_local, impl=paged["impl"], interpret=paged["interpret"])
+        elif mode == "decode":
             attn_out, new_k, new_v = attn_lib.decode_attention(
                 x, bp["attn"], cfg, kv[0], kv[1], pos, is_local)
         else:
@@ -155,10 +184,11 @@ def _mixer(x, bp, cfg: ModelConfig, layer_idx, positions, mode,
 
 
 def _block(x, bp, cfg: ModelConfig, layer_idx, positions, mode,
-           kv=None, ssm_state=None, conv=None, pos=None, with_aux=False):
+           kv=None, ssm_state=None, conv=None, pos=None, with_aux=False,
+           paged=None):
     h = rms_norm(x, bp["ln1"], cfg.norm_eps)
     mix, new_kv, new_ssm = _mixer(h, bp, cfg, layer_idx, positions, mode,
-                                  kv, ssm_state, conv, pos)
+                                  kv, ssm_state, conv, pos, paged)
     if cfg.sandwich_norm:
         mix = rms_norm(mix, bp["post_ln1"], cfg.norm_eps)
     x = x + mix
@@ -302,17 +332,14 @@ def prefill(params, cfg: ModelConfig, tokens=None, embeds=None):
 # --------------------------------------------------------------------------
 
 
-def decode_step(params, cfg: ModelConfig, tokens, cache: DecodeCache,
-                embeds=None):
-    """One token for every sequence in the batch.
+def _decode_core(params, cfg: ModelConfig, tokens, embeds, pos,
+                 k, v, ssm, conv, paged):
+    """Shared decode-step body: embed, layer scan, logits.
 
-    Args:
-      tokens: [B] int32 (or embeds [B, 1, d] for stub-frontend archs).
-      cache: DecodeCache whose attention K/V buffers have a fixed max length.
-    Returns: (logits [B, Vpad] fp32, updated DecodeCache)
+    ``paged=None`` runs dense cached attention over k/v [L, B, Smax, Hkv, D];
+    a paged dict (see ``_mixer``) runs paged attention over pools.
+    Returns (logits [B, Vpad] fp32, per-layer ys dict of new state).
     """
-    pos = cache.pos
-    B = pos.shape[0]
     positions = pos[:, None]
     x = embed_inputs(params, cfg, None if tokens is None else tokens[:, None],
                      embeds, positions)
@@ -322,7 +349,8 @@ def decode_step(params, cfg: ModelConfig, tokens, cache: DecodeCache,
         bp, layer_idx, k_l, v_l, ssm_l, conv_l = scanned
         x, new_kv, new_ssm, _ = _block(
             x, bp, cfg, layer_idx, positions, "decode",
-            kv=(k_l, v_l), ssm_state=ssm_l, conv=conv_l, pos=pos)
+            kv=(k_l, v_l), ssm_state=ssm_l, conv=conv_l, pos=pos,
+            paged=paged)
         ys = {}
         if cfg.has_attn:
             ys["k"], ys["v"] = new_kv
@@ -333,14 +361,53 @@ def decode_step(params, cfg: ModelConfig, tokens, cache: DecodeCache,
     L = cfg.n_layers
     dummy = jnp.zeros((L,), jnp.int32)
     xs = (params["blocks"], jnp.arange(L),
-          cache.k if cache.k is not None else dummy,
-          cache.v if cache.v is not None else dummy,
-          cache.ssm if cache.ssm is not None else dummy,
-          cache.conv if cache.conv is not None else dummy)
+          k if k is not None else dummy,
+          v if v is not None else dummy,
+          ssm if ssm is not None else dummy,
+          conv if conv is not None else dummy)
     x, ys = jax.lax.scan(body, x, xs, unroll=cfg.scan_unroll)
-    logits = lm_logits(params, cfg, x)[:, 0]
+    return lm_logits(params, cfg, x)[:, 0], ys
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache: DecodeCache,
+                embeds=None):
+    """One token for every sequence in the batch.
+
+    Args:
+      tokens: [B] int32 (or embeds [B, 1, d] for stub-frontend archs).
+      cache: DecodeCache whose attention K/V buffers have a fixed max length.
+    Returns: (logits [B, Vpad] fp32, updated DecodeCache)
+    """
+    logits, ys = _decode_core(params, cfg, tokens, embeds, cache.pos,
+                              cache.k, cache.v, cache.ssm, cache.conv, None)
     new_cache = DecodeCache(
         k=ys.get("k", cache.k), v=ys.get("v", cache.v),
         ssm=ys.get("ssm", cache.ssm), conv=ys.get("conv", cache.conv),
-        pos=pos + 1)
+        pos=cache.pos + 1)
     return logits, new_cache
+
+
+def decode_step_paged(params, cfg: ModelConfig, tokens,
+                      state: PagedDecodeState, embeds=None, *,
+                      attn_impl: str = "jnp", interpret: bool = False):
+    """One token for every sequence, attending the paged KV pool directly.
+
+    The per-layer new K/V token is scattered into its page and attention
+    reads pages through the block table — no dense [B, S, Hkv, D] cache is
+    ever materialized (the device-resident serving decode path).
+
+    Args:
+      tokens: [B] int32 (or embeds [B, 1, d] for stub-frontend archs).
+      state: PagedDecodeState; ``state.lens`` is the write/attend position.
+      attn_impl: "kernel" (Pallas paged kernel) or "jnp" (exact fallback).
+    Returns: (logits [B, Vpad] fp32, updated PagedDecodeState with lens+1)
+    """
+    paged = {"table": state.block_table, "impl": attn_impl,
+             "interpret": interpret}
+    logits, ys = _decode_core(params, cfg, tokens, embeds, state.lens,
+                              state.k, state.v, state.ssm, state.conv, paged)
+    new_state = PagedDecodeState(
+        k=ys.get("k", state.k), v=ys.get("v", state.v),
+        block_table=state.block_table, lens=state.lens + 1,
+        ssm=ys.get("ssm", state.ssm), conv=ys.get("conv", state.conv))
+    return logits, new_state

@@ -14,7 +14,6 @@ All policies share the cost model (fair comparison: same profiling data).
 from __future__ import annotations
 
 import dataclasses
-import itertools
 
 import numpy as np
 
@@ -22,8 +21,8 @@ from repro.core.assignment import assign_workloads
 from repro.core.costmodel import CostModel
 from repro.core.deployment import flow_guided_search
 from repro.core.orchestrator import Orchestrator, OrchestratorConfig
-from repro.core.types import (ClusterSpec, Deployment, ReplicaConfig,
-                              WorkloadType, valid_strategies)
+from repro.core.types import (ClusterSpec, Deployment, WorkloadType,
+                              valid_strategies)
 from repro.serving.simulator import SpanDecision
 
 

@@ -2,23 +2,34 @@
 
 vLLM-style loop: admit prompts while KV blocks remain, run batched prefill,
 then step decode over the active set, emitting one token per sequence per
-step; finished sequences free their pages immediately.
+step; finished sequences free their pages immediately.  Prefill and decode
+interleave within a step, so admissions never starve running sequences.
 
-The decode step gathers pages into a dense view and reuses the model's
-``decode_step`` (exact); the Pallas flash-decode kernel consumes the same
-block-table layout directly on TPU (``repro.kernels``).
+The decode path is device-resident end to end: one jitted fused step
+(``decode_step_paged`` + token scatter + sampling) consumes the paged KV
+pool directly through the device block table, with no per-sequence host
+syncs (a single [B] token transfer per step).  On TPU the Pallas paged
+kernel reads pages in place (gather-free); the CPU/jnp fallback still
+gathers the table's pages inside the jit, so its win comes from bucketed
+shapes and the removed host round-trips, not memory traffic.  Active
+batches are padded to power-of-two buckets and the page count to power-of-
+two page buckets, so the number of distinct compilations is
+O(log max_seqs * log max_pages) instead of one per (batch, length) shape.
+The legacy dense-gather path survives as ``decode_mode="dense"`` for A/B
+benchmarking (``benchmarks/bench_engine.py``).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models import DecodeCache, decode_step, prefill
+from repro.models import (DecodeCache, PagedDecodeState, decode_step,
+                          decode_step_paged, prefill)
 from repro.models.config import ModelConfig
+from repro.models.sampling import sample
 from repro.serving.kvcache import PagedKVCache
 
 
@@ -32,15 +43,33 @@ class EngineRequest:
     done: bool = False
 
 
+def _pow2_bucket(n: int, cap: int) -> int:
+    """Smallest power of two >= n, clipped to cap."""
+    return min(cap, 1 << max(0, n - 1).bit_length())
+
+
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, num_blocks: int = 512,
                  block_size: int = 16, max_seqs: int = 8,
-                 dtype=jnp.float32, greedy: bool = True, seed: int = 0):
+                 dtype=jnp.float32, greedy: bool = True, seed: int = 0,
+                 decode_mode: str = "paged", attn_impl: str = "auto"):
         self.cfg = cfg
         self.params = params
+        if decode_mode not in ("paged", "dense"):
+            raise ValueError(f"unknown decode_mode {decode_mode!r}")
+        self.decode_mode = decode_mode
+        on_tpu = jax.default_backend() == "tpu"
+        if attn_impl == "auto":
+            attn_impl = "kernel" if on_tpu else "jnp"
+        self._attn_impl = attn_impl
+        self._interpret = attn_impl == "kernel" and not on_tpu
+        # the kernel path wants lane-aligned head_dim; pad the pool once at
+        # allocation rather than re-padding it every decode step
+        head_pad = 128 if attn_impl == "kernel" else 1
         self.cache = PagedKVCache.create(
             cfg, num_blocks, block_size, max_seqs,
-            max_blocks_per_seq=cfg.max_seq_len // block_size, dtype=dtype)
+            max_blocks_per_seq=cfg.max_seq_len // block_size, dtype=dtype,
+            head_pad=head_pad)
         self.max_seqs = max_seqs
         self.dtype = dtype
         self.greedy = greedy
@@ -54,6 +83,41 @@ class ServingEngine:
             lambda p, toks: prefill(p, cfg, tokens=toks))
         self._decode = jax.jit(
             lambda p, toks, cache: decode_step(p, cfg, toks, cache))
+        self._fused = self._build_fused()
+
+    def _build_fused(self):
+        """The jitted device-resident decode step.
+
+        Gathers per-slot metadata/state from the full-size device arrays,
+        runs the paged decode, samples, and scatters lens/SSM state back —
+        tokens are the only thing that crosses back to the host.
+        """
+        cfg, greedy = self.cfg, self.greedy
+        impl, interp = self._attn_impl, self._interpret
+        trash = self.cache.trash_slot
+
+        def fused(params, k, v, table_full, lens_full, ssm_full, conv_full,
+                  slots, tokens, key, n_pages):
+            table = table_full[slots, :n_pages]
+            lens = lens_full[slots]
+            ssm = ssm_full[:, slots] if ssm_full is not None else None
+            conv = conv_full[:, slots] if conv_full is not None else None
+            st = PagedDecodeState(k=k, v=v, block_table=table, lens=lens,
+                                  ssm=ssm, conv=conv)
+            logits, st = decode_step_paged(params, cfg, tokens, st,
+                                           attn_impl=impl, interpret=interp)
+            toks = sample(logits, cfg, key,
+                          temperature=0.0 if greedy else 1.0)
+            lens_full = lens_full.at[slots].add(1).at[trash].set(0)
+            if ssm_full is not None:
+                ssm_full = ssm_full.at[:, slots].set(st.ssm)
+                conv_full = conv_full.at[:, slots].set(st.conv)
+            return toks, st.k, st.v, lens_full, ssm_full, conv_full
+
+        # donate the pools/state so XLA updates pages in place (no-op on CPU)
+        donate = (1, 2, 4, 5, 6) if jax.default_backend() != "cpu" else ()
+        return jax.jit(fused, static_argnames=("n_pages",),
+                       donate_argnums=donate)
 
     # -- submission ------------------------------------------------------------
 
@@ -90,6 +154,7 @@ class ServingEngine:
         for pl, group in by_len.items():
             toks = np.stack([r.prompt for r in group])
             logits, cache = self._prefill(self.params, jnp.asarray(toks))
+            first = self._pick(logits)           # one sync per prefill group
             for i, r in enumerate(group):
                 if self.cfg.has_attn:
                     self.cache.write_prefill(r.slot, cache.k[:, i],
@@ -99,19 +164,53 @@ class ServingEngine:
                         cache.ssm[:, i])
                     self.cache.conv = self.cache.conv.at[:, r.slot].set(
                         cache.conv[:, i])
-                tok = self._pick(logits[i:i + 1])[0]
-                r.generated.append(int(tok))
+                r.generated.append(int(first[i]))
                 self.tokens_out += 1
 
     def _pick(self, logits: jax.Array) -> np.ndarray:
-        from repro.models.sampling import sample
         if self.greedy:
             return np.asarray(sample(logits, self.cfg, self.key))
         self.key, sub = jax.random.split(self.key)
         return np.asarray(sample(logits, self.cfg, sub, temperature=1.0))
 
-    def _run_decode(self) -> None:
-        slots = np.array(sorted(self.active), np.int32)
+    # -- decode paths ----------------------------------------------------------
+
+    def _run_decode(self, slots: list[int]) -> None:
+        """Device-resident paged decode over the given slots (gather-free)."""
+        slots = sorted(slots)
+        for s in slots:                      # page capacity for the new token
+            self.cache.extend(s)
+        B = len(slots)
+        bucket = _pow2_bucket(B, self.max_seqs)
+        trash = self.cache.trash_slot
+        pad = bucket - B
+        slot_arr = np.array(slots + [trash] * pad, np.int32)
+        last = np.array([self.active[s].generated[-1] for s in slots]
+                        + [0] * pad, np.int32)
+        bs = self.cache.block_size
+        need = (int(self.cache.seq_lens[slots].max()) + bs - 1) // bs
+        n_pages = _pow2_bucket(need, self.cache.max_blocks_per_seq)
+        if self.greedy:
+            sub = self.key
+        else:
+            self.key, sub = jax.random.split(self.key)
+        toks, k, v, lens_dev, ssm, conv = self._fused(
+            self.params, self.cache.k, self.cache.v,
+            self.cache.block_table_dev, self.cache.seq_lens_dev,
+            self.cache.ssm, self.cache.conv,
+            jnp.asarray(slot_arr), jnp.asarray(last), sub, n_pages=n_pages)
+        self.cache.k, self.cache.v = k, v
+        self.cache.seq_lens_dev = lens_dev
+        self.cache.ssm, self.cache.conv = ssm, conv
+        toks = np.asarray(toks)              # the one device->host transfer
+        for i, s in enumerate(slots):
+            r = self.active[s]
+            r.generated.append(int(toks[i]))
+            self.tokens_out += 1
+
+    def _run_decode_dense(self, slots: list[int]) -> None:
+        """Legacy dense-gather decode (A/B baseline for bench_engine)."""
+        slots = np.array(sorted(slots), np.int32)
         B = len(slots)
         lens = self.cache.seq_lens[slots].copy()
         max_len = int(lens.max()) + 1
@@ -156,13 +255,22 @@ class ServingEngine:
     # -- main loop ---------------------------------------------------------------
 
     def step(self) -> list[EngineRequest]:
-        """One scheduler iteration; returns requests finished this step."""
+        """One scheduler iteration; returns requests finished this step.
+
+        Prefill and decode interleave: sequences that were already active
+        still emit their decode token on a step that admits new prompts
+        (newly admitted requests get their first token from prefill itself).
+        """
         self.steps += 1
+        decode_slots = list(self.active)
         admitted = self._admit()
         if admitted:
             self._run_prefill(admitted)
-        elif self.active:
-            self._run_decode()
+        if decode_slots:
+            if self.decode_mode == "paged":
+                self._run_decode(decode_slots)
+            else:
+                self._run_decode_dense(decode_slots)
         return self._retire()
 
     def run_to_completion(self, max_steps: int = 100_000

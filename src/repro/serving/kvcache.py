@@ -1,10 +1,21 @@
-"""Paged KV cache (vLLM-style) in JAX.
+"""Paged KV cache (vLLM-style) in JAX — device-resident decode metadata.
 
-Storage: per layer-stacked pools ``k/v: [L, num_blocks, block_size, Hkv, D]``
-plus a host-side block allocator.  Sequences own block lists; the device-side
-``block_table [max_seqs, max_blocks_per_seq]`` maps slot x logical-block ->
-physical block.  The decode path gathers pages (jnp path here; the Pallas
-flash-decode kernel consumes the same table layout).
+Storage: per layer-stacked pools ``k/v: [L, num_blocks + 1, Hkv, block,
+D]`` in kernel-native layout (the Pallas paged-decode kernel and the jnp
+fallback both read ``[page, Hkv, block, D]`` tiles without a transpose).
+Physical block ``num_blocks`` is a trash page: padded batch slots scatter
+their dummy K/V there, so the fused decode step needs no masking branches.
+
+The host-side ``BlockAllocator`` remains the source of truth for block
+ownership; ``block_table``/``seq_lens`` (host numpy) mirror it for the
+scheduler.  Device-resident copies ``block_table_dev [max_seqs + 1,
+max_blocks_per_seq]`` and ``seq_lens_dev [max_seqs + 1]`` are synced
+*incrementally* — one small scatter on admit / page-crossing / release —
+never re-uploaded wholesale per step.  Row ``max_seqs`` is the trash slot
+(points at the trash page) used to pad decode batches to bucket sizes.
+
+``gather_dense`` survives only for the legacy dense-gather decode path and
+parity tests; the serving decode path consumes pages directly.
 """
 from __future__ import annotations
 
@@ -57,37 +68,53 @@ class PagedKVCache:
     num_blocks: int
     max_seqs: int
     max_blocks_per_seq: int
-    k: jax.Array        # [L, num_blocks, block, Hkv, D]
+    k: jax.Array        # [L, num_blocks + 1, Hkv, block, D] (+1 = trash page)
     v: jax.Array
-    ssm: jax.Array | None
+    ssm: jax.Array | None       # [L, max_seqs + 1, ...] (+1 = trash row)
     conv: jax.Array | None
     block_table: np.ndarray     # host [max_seqs, max_blocks_per_seq] int32
     seq_lens: np.ndarray        # host [max_seqs] int32
+    block_table_dev: jax.Array  # device [max_seqs + 1, max_blocks_per_seq]
+    seq_lens_dev: jax.Array     # device [max_seqs + 1]
     allocator: BlockAllocator
     seq_blocks: dict            # slot -> list[int]
 
     @classmethod
     def create(cls, cfg: ModelConfig, num_blocks: int = 256,
                block_size: int = 16, max_seqs: int = 16,
-               max_blocks_per_seq: int = 64, dtype=jnp.float32
-               ) -> "PagedKVCache":
+               max_blocks_per_seq: int = 64, dtype=jnp.float32,
+               head_pad: int = 1) -> "PagedKVCache":
         L = cfg.n_layers
         k = v = ssm = conv = None
         if cfg.has_attn:
-            shape = (L, num_blocks, block_size, cfg.n_kv_heads, cfg.head_dim)
+            # head_pad > 1 (the Pallas kernel path) pads head_dim once at
+            # allocation so the per-step kernel call never re-pads the pool
+            d_pool = -(-cfg.head_dim // head_pad) * head_pad
+            shape = (L, num_blocks + 1, cfg.n_kv_heads, block_size, d_pool)
             k = jnp.zeros(shape, dtype)
             v = jnp.zeros(shape, dtype)
         if cfg.has_ssm:
             from repro.models.ssm import conv_channels
-            ssm = jnp.zeros((L, max_seqs, cfg.ssm_heads, cfg.ssm_head_dim,
+            ssm = jnp.zeros((L, max_seqs + 1, cfg.ssm_heads, cfg.ssm_head_dim,
                              cfg.ssm_state), jnp.float32)
-            conv = jnp.zeros((L, max_seqs, cfg.ssm_conv_width - 1,
+            conv = jnp.zeros((L, max_seqs + 1, cfg.ssm_conv_width - 1,
                               conv_channels(cfg)), dtype)
+        # device tables start pointing at the trash page so un-admitted /
+        # padded rows gather zeros and scatter into the trash page
+        table_dev = jnp.full((max_seqs + 1, max_blocks_per_seq), num_blocks,
+                             jnp.int32)
+        lens_dev = jnp.zeros((max_seqs + 1,), jnp.int32)
         return cls(cfg, block_size, num_blocks, max_seqs, max_blocks_per_seq,
                    k, v, ssm, conv,
                    np.zeros((max_seqs, max_blocks_per_seq), np.int32),
                    np.zeros(max_seqs, np.int32),
+                   table_dev, lens_dev,
                    BlockAllocator(num_blocks), {})
+
+    @property
+    def trash_slot(self) -> int:
+        """Device table/lens row used to pad decode batches to bucket size."""
+        return self.max_seqs
 
     # -- slot lifecycle -------------------------------------------------------
 
@@ -98,13 +125,24 @@ class PagedKVCache:
         self.block_table[slot, :] = 0
         self.block_table[slot, :n] = blocks
         self.seq_lens[slot] = prompt_len
+        # incremental device sync: one row scatter per admission
+        row = np.full(self.max_blocks_per_seq, self.num_blocks, np.int32)
+        row[:n] = blocks
+        self.block_table_dev = self.block_table_dev.at[slot].set(
+            jnp.asarray(row))
+        self.seq_lens_dev = self.seq_lens_dev.at[slot].set(prompt_len)
 
     def can_admit(self, prompt_len: int, headroom_blocks: int = 2) -> bool:
         n = (prompt_len + self.block_size - 1) // self.block_size
         return self.allocator.n_free >= n + headroom_blocks
 
     def extend(self, slot: int) -> None:
-        """Ensure capacity for one more token."""
+        """Ensure capacity for one more token.
+
+        The host length advances here; the device ``seq_lens_dev`` row
+        advances inside the fused decode step (one scatter-add for the whole
+        batch), keeping the two in lockstep without per-sequence transfers.
+        """
         new_len = int(self.seq_lens[slot]) + 1
         n_have = len(self.seq_blocks[slot])
         if new_len > n_have * self.block_size:
@@ -113,12 +151,17 @@ class PagedKVCache:
             b = self.allocator.alloc(1)[0]
             self.seq_blocks[slot].append(b)
             self.block_table[slot, n_have] = b
+            # incremental device sync: single-element scatter on page crossing
+            self.block_table_dev = self.block_table_dev.at[slot, n_have].set(b)
         self.seq_lens[slot] = new_len
 
     def release_slot(self, slot: int) -> None:
         self.allocator.release(self.seq_blocks.pop(slot, []))
         self.seq_lens[slot] = 0
         self.block_table[slot, :] = 0
+        self.block_table_dev = self.block_table_dev.at[slot].set(
+            self.num_blocks)
+        self.seq_lens_dev = self.seq_lens_dev.at[slot].set(0)
 
     # -- device views ----------------------------------------------------------
 
@@ -129,11 +172,14 @@ class PagedKVCache:
         bs = self.block_size
         n = (S + bs - 1) // bs
         pad = n * bs - S
-        if pad:
-            k_seq = jnp.pad(k_seq, ((0, 0), (0, pad), (0, 0), (0, 0)))
-            v_seq = jnp.pad(v_seq, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dpad = self.k.shape[-1] - k_seq.shape[-1]
+        if pad or dpad:
+            k_seq = jnp.pad(k_seq, ((0, 0), (0, pad), (0, 0), (0, dpad)))
+            v_seq = jnp.pad(v_seq, ((0, 0), (0, pad), (0, 0), (0, dpad)))
         kb = k_seq.reshape(k_seq.shape[0], n, bs, *k_seq.shape[2:])
         vb = v_seq.reshape(v_seq.shape[0], n, bs, *v_seq.shape[2:])
+        kb = jnp.swapaxes(kb, 2, 3)          # [L, n, Hkv, bs, D] native
+        vb = jnp.swapaxes(vb, 2, 3)
         idx = jnp.asarray(self.seq_blocks[slot], jnp.int32)
         self.k = self.k.at[:, idx].set(kb.astype(self.k.dtype))
         self.v = self.v.at[:, idx].set(vb.astype(self.v.dtype))
@@ -145,20 +191,33 @@ class PagedKVCache:
         off = positions % self.block_size
         blk = jnp.asarray(blk)
         off = jnp.asarray(off)
-        self.k = self.k.at[:, blk, off].set(k_new.astype(self.k.dtype))
-        self.v = self.v.at[:, blk, off].set(v_new.astype(self.v.dtype))
+        # pool is [L, P, Hkv, block, D]: non-adjacent advanced indices put
+        # the batch dim first, so updates arrive as [B, L, Hkv, D]
+        dpad = self.k.shape[-1] - k_new.shape[-1]
+        if dpad:
+            k_new = jnp.pad(k_new, ((0, 0),) * 3 + ((0, dpad),))
+            v_new = jnp.pad(v_new, ((0, 0),) * 3 + ((0, dpad),))
+        kv = jnp.moveaxis(k_new, 0, 1).astype(self.k.dtype)
+        vv = jnp.moveaxis(v_new, 0, 1).astype(self.v.dtype)
+        self.k = self.k.at[:, blk, :, off].set(kv)
+        self.v = self.v.at[:, blk, :, off].set(vv)
 
     def gather_dense(self, slots: np.ndarray, max_len: int
                      ) -> tuple[jax.Array, jax.Array, jax.Array]:
-        """Materialize [L, B, max_len, Hkv, D] dense caches for the jnp decode
-        path (the Pallas kernel reads pages directly instead)."""
+        """Materialize [L, B, max_len, Hkv, D] dense caches (legacy
+        dense-gather decode path and parity tests only — the serving decode
+        path reads pages in place via the block table)."""
         bs = self.block_size
         n_blocks = (max_len + bs - 1) // bs
         table = jnp.asarray(self.block_table[slots, :n_blocks])   # [B, n]
-        k = self.k[:, table]          # [L, B, n, bs, H, D]
+        k = self.k[:, table]          # [L, B, n, Hkv, bs, D]
         v = self.v[:, table]
         L, B = k.shape[0], k.shape[1]
+        k = jnp.swapaxes(k, 3, 4)     # [L, B, n, bs, Hkv, D]
+        v = jnp.swapaxes(v, 3, 4)
         k = k.reshape(L, B, n_blocks * bs, *k.shape[4:])[:, :, :max_len]
         v = v.reshape(L, B, n_blocks * bs, *v.shape[4:])[:, :, :max_len]
+        D = self.cfg.head_dim
+        k, v = k[..., :D], v[..., :D]   # drop kernel head_pad columns
         lens = jnp.asarray(self.seq_lens[slots])
         return k, v, lens

@@ -2,9 +2,7 @@
 import os
 
 import jax
-import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_smoke_config
 from repro.data.pipeline import DataConfig, SyntheticCorpus, packed_batches

@@ -1,9 +1,10 @@
 """Max-flow / LP / flow-network unit + property tests."""
-import math
 import random
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.flownet import (WorkloadFlowNetwork, maxflow_edmonds_karp,

@@ -7,7 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import ASSIGNED_ARCHS, get_config, get_smoke_config
+from repro.configs import ASSIGNED_ARCHS, get_smoke_config
 from repro.data.pipeline import DataConfig, packed_batches
 from repro.models import (decode_step, forward, init_cache, init_params,
                           prefill)

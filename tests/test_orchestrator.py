@@ -4,7 +4,7 @@ import pytest
 
 from repro.configs import get_config
 from repro.core.costmodel import CostModel
-from repro.core.orchestrator import Orchestrator, OrchestratorConfig
+from repro.core.orchestrator import Orchestrator
 from repro.core.types import ClusterSpec, H100_SPEC, WorkloadType
 
 ARCH = [WorkloadType(1275, 287), WorkloadType(139, 133),

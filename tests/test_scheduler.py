@@ -7,8 +7,8 @@ from repro.core.assignment import assign_workloads
 from repro.core.costmodel import CostModel
 from repro.core.deployment import (enumerate_deployments, exhaustive_search,
                                    flow_guided_search, uniform_initial)
-from repro.core.types import (ClusterSpec, Deployment, H100_SPEC,
-                              ReplicaConfig, WorkloadType, valid_strategies)
+from repro.core.types import (Deployment, H100_SPEC, ReplicaConfig,
+                              WorkloadType, valid_strategies)
 
 ARCH = [WorkloadType(1275, 287), WorkloadType(139, 133),
         WorkloadType(1181, 1824), WorkloadType(282, 1121)]

@@ -1,12 +1,14 @@
 """Greedy switch planner (Algorithm 2) property tests."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.configs import get_config
 from repro.core.costmodel import CostModel
-from repro.core.switching import (PlacedDeployment, place_deployment,
-                                  plan_kv_migration, plan_switch)
+from repro.core.switching import (place_deployment, plan_kv_migration,
+                                  plan_switch)
 from repro.core.types import (ClusterSpec, Deployment, ReplicaConfig,
                               TPU_V5E_SPEC, valid_strategies)
 

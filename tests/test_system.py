@@ -8,8 +8,7 @@ import pytest
 
 from benchmarks.common import Bench
 from repro.core.predictor import LSTMWorkloadPredictor
-from repro.serving.baselines import (OServePolicy, VLLMReloadPolicy,
-                                     VLLMStaticPolicy)
+from repro.serving.baselines import OServePolicy, VLLMStaticPolicy
 
 
 @pytest.fixture(scope="module")
