@@ -3,6 +3,13 @@
 One row per (model x chips x trace x policy): P99/avg latency, throughput,
 drops, switch count.  `--chips 32` reproduces the 32-GPU scaling study
 (Fig. 12); per-span P1-P6 slices reproduce Fig. 9.
+
+``real_validation`` closes the loop on the simulator itself: the same
+orchestrator plans are executed on real JAX engines (``ClusterRuntime``,
+smoke-scale model) and the planner's predicted per-replica traffic shares
+are compared against the shares the engines actually served — the
+``e2e-real`` rows report the L1 share error plus live-switch counters
+(drained / migrated requests).
 """
 from __future__ import annotations
 
@@ -59,6 +66,30 @@ def run(model: str = "opt-30b", chips: int = 16, trace_id: int = 1,
     return rows
 
 
+def real_validation(model: str = "opt-30b", chips: int = 6,
+                    n_spans: int = 2, requests_per_span: int = 6,
+                    seed: int = 0) -> list[str]:
+    """Execute orchestrator plans on real engines; score plan vs reality."""
+    from repro.serving.validation import run_real_spans
+
+    outcomes, runtime = run_real_spans(
+        model=model, chips=chips, n_spans=n_spans,
+        requests_per_span=requests_per_span, seed=seed)
+    rows = []
+    for o in outcomes:
+        rows.append(
+            f"e2e-real/{model}/{chips}c/span{o.span},"
+            f"{o.seconds * 1e6:.0f},"
+            f"dep={o.plan.deployment};share_l1={o.share_l1:.2f}"
+            f";drained={o.switch.drained};migrated={o.switch.migrated}"
+            f";completed={o.report.completed}")
+    done = sum(1 for r in runtime.results.values() if r.done)
+    rows.append(f"e2e-real/{model}/{chips}c/total,0,"
+                f"completed={done}/{n_spans * requests_per_span};switches="
+                f"{sum(1 for r in runtime.switch_reports[1:] if r.changed)}")
+    return rows
+
+
 def main(fast: bool = True) -> list[str]:
     rows = []
     combos = ([("opt-30b", 16, 1), ("opt-30b", 16, 2)] if fast else
@@ -67,6 +98,7 @@ def main(fast: bool = True) -> list[str]:
                ("llama2-70b", 32, 1), ("llama-30b", 8, 2)])
     for model, chips, trace in combos:
         rows.extend(run(model, chips, trace, spans_detail=True))
+    rows.extend(real_validation(n_spans=2 if fast else 4))
     return rows
 
 

@@ -1,11 +1,20 @@
 """OServe end-to-end: predictor -> scheduler -> switch planner -> cluster.
 
-Drives the full control loop over a fluctuating trace at paper scale (via the
-calibrated discrete-event cluster) and prints per-span decisions: predicted
-rates, chosen heterogeneous deployment, workload assignment, and switch cost
-(ad hoc vs naive reload).
+Default mode drives the full control loop over a fluctuating trace at paper
+scale (via the calibrated discrete-event cluster) and prints per-span
+decisions: predicted rates, chosen heterogeneous deployment, workload
+assignment, and switch cost (ad hoc vs naive reload).
 
     PYTHONPATH=src python examples/serve_orchestrated.py [--spans 12]
+
+``--real`` executes the same orchestrator's plans on *real* JAX engines via
+``ClusterRuntime`` (smoke-scale model so it runs on CPU): heterogeneous
+replicas partition one device KV pool, typed requests route through the
+plan's fractions, deployment switches drain/migrate live requests, and each
+span reports predicted vs achieved per-replica traffic shares — the
+simulator's predictions validated against actual engine behavior.
+
+    PYTHONPATH=src python examples/serve_orchestrated.py --real --spans 2
 """
 import argparse
 
@@ -19,13 +28,7 @@ from repro.core.types import ClusterSpec, H100_SPEC, WorkloadType
 from repro.serving.request import span_of, synthesize_trace
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--spans", type=int, default=12)
-    ap.add_argument("--chips", type=int, default=16)
-    ap.add_argument("--model", default="opt-30b")
-    args = ap.parse_args()
-
+def run_analytic(args) -> None:
     cfg = get_config(args.model)
     cm = CostModel(cfg.profile(), hw=H100_SPEC)
     cluster = ClusterSpec(args.chips, hw=H100_SPEC)
@@ -66,6 +69,56 @@ def main():
     plan = orch.on_cluster_change(args.chips - 4, ws)
     print(f"FAILURE of 4 chips -> re-planned {plan.deployment} "
           f"on {args.chips - 4} chips, switch {plan.switch_seconds:.2f}s")
+
+
+def run_real(args) -> None:
+    from repro.serving.validation import run_real_spans
+
+    outcomes, runtime = run_real_spans(
+        model=args.model, chips=args.chips, n_spans=args.spans,
+        requests_per_span=args.requests_per_span, seed=args.seed)
+    print(f"{runtime.cfg.name} (real engines) planning as {args.model} on "
+          f"{args.chips} chips")
+    for o in outcomes:
+        switch, report = o.switch, o.report
+        if o.span == 0:
+            sw = "initial build"
+        elif switch.changed:
+            sw = (f"switch: rebuilt {switch.changed}, "
+                  f"drained {switch.drained}, migrated {switch.migrated}, "
+                  f"requeued {switch.requeued}")
+        else:
+            sw = "no switch"
+        print(f"span {o.span} | {o.plan.deployment} | {sw}")
+        print(f"  predicted replica share {np.round(o.predicted_share, 2)} | "
+              f"achieved (tokens) {np.round(o.achieved_share, 2)} | "
+              f"completed {report.completed}/{o.n_requests} | "
+              f"health {np.round(report.achieved_fraction, 2)} | "
+              f"observed-rate EWMA {np.round(o.observed_rates, 1)}")
+    total = args.spans * args.requests_per_span
+    done = sum(1 for r in runtime.results.values() if r.done)
+    # span 0 is the initial build, not a switch (same convention as
+    # bench_e2e's real rows)
+    print(f"total completed {done}/{total}; "
+          f"switches executed: "
+          f"{sum(1 for r in runtime.switch_reports[1:] if r.changed)}")
+    assert done == total, "some requests never completed"
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--spans", type=int, default=12)
+    ap.add_argument("--chips", type=int, default=16)
+    ap.add_argument("--model", default="opt-30b")
+    ap.add_argument("--real", action="store_true",
+                    help="execute plans on real engines (smoke-scale model)")
+    ap.add_argument("--requests-per-span", type=int, default=6)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    if args.real:
+        run_real(args)
+    else:
+        run_analytic(args)
 
 
 if __name__ == "__main__":

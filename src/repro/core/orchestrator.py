@@ -12,6 +12,17 @@ Per time span:
 re-run the same loop with the surviving chip count; EWMA health scaling
 (straggler mitigation) shrinks a degraded replica's capacities so the flow
 re-routes around it.
+
+Observation hooks (fed by ``serving.cluster.ClusterRuntime`` and the
+discrete-event simulator driver, not just by predictions):
+
+  * ``observe_health(achieved_fraction)`` — per-replica achieved/expected
+    throughput for the last span; the EWMA scales the current deployment's
+    capacities in the next assignment, so traffic shifts away from
+    stragglers.
+  * ``observe_rates(rates)`` — realized per-type arrival counts; the EWMA
+    is exposed via ``blended_workloads`` so drivers can correct (or replace)
+    the predictor's forecast with what actually arrived.
 """
 from __future__ import annotations
 
@@ -60,8 +71,9 @@ class Orchestrator:
         self.current: Deployment | None = None
         self.placed: PlacedDeployment | None = None
         self.health: np.ndarray | None = None   # per-replica EWMA in (0, 1]
+        self.observed_rates: np.ndarray | None = None  # per-type EWMA
 
-    # -- health / stragglers ---------------------------------------------------
+    # -- observation (health / stragglers, realized rates) ---------------------
 
     def observe_health(self, achieved_fraction: list[float]) -> None:
         """achieved/(expected) throughput per replica for the last span."""
@@ -71,6 +83,28 @@ class Orchestrator:
         else:
             a = self.cfg.ewma_alpha
             self.health = (1 - a) * self.health + a * obs
+
+    def observe_rates(self, rates) -> None:
+        """Realized per-type arrival counts for the last span (EWMA)."""
+        obs = np.asarray(rates, float)
+        if self.observed_rates is None or len(self.observed_rates) != len(obs):
+            self.observed_rates = obs
+        else:
+            a = self.cfg.ewma_alpha
+            self.observed_rates = (1 - a) * self.observed_rates + a * obs
+
+    def blended_workloads(self, workloads: list[WorkloadType],
+                          trust: float = 0.5) -> list[WorkloadType]:
+        """Correct predicted rates with the observed-rate EWMA.
+
+        ``trust`` is the weight on the observation (0 = pure prediction,
+        1 = pure observation); with no observations yet, predictions pass
+        through unchanged."""
+        if (self.observed_rates is None
+                or len(self.observed_rates) != len(workloads)):
+            return list(workloads)
+        return [w.with_rate((1 - trust) * w.rate + trust * float(o))
+                for w, o in zip(workloads, self.observed_rates)]
 
     # -- the per-span decision ---------------------------------------------------
 
@@ -83,12 +117,13 @@ class Orchestrator:
             patience=self.cfg.search_patience, seed=self.cfg.search_seed,
             initial=self.current)
         new_dep, result = search.deployment, search.assignment
+        scale = None
+        if (self.health is not None and self.current is not None
+                and len(self.health) == self.current.dp):
+            scale = list(self.health)
 
+        result_scaled = False
         if self.current is not None and not force:
-            scale = None
-            if (self.health is not None
-                    and len(self.health) == self.current.dp):
-                scale = list(self.health)
             cur_res = assign_workloads(self.cm, self.current, workloads,
                                        capacity_scale=scale)
             # Switch only for a clear win: >hysteresis gain in served demand
@@ -109,6 +144,17 @@ class Orchestrator:
                         < 0.95 * cur_res.latency_proxy())
             if not (thr_gain or cap_gain or lat_gain):
                 new_dep, result = self.current, cur_res
+            result_scaled = result is cur_res
+
+        # Health must reach the routed fractions even when the *search* wins
+        # with the structurally-same deployment: re-solve its assignment under
+        # the EWMA capacity scale so stragglers shed traffic either way
+        # (skipped when the kept result already carries the scale).
+        if (scale is not None and self.current is not None
+                and new_dep.replicas == self.current.replicas
+                and not result_scaled):
+            result = assign_workloads(self.cm, new_dep, workloads,
+                                      capacity_scale=scale)
 
         switch_s = 0.0
         reload_s = self.cm.reload_seconds()

@@ -110,6 +110,12 @@ class OServePolicy:
         self.history: list[np.ndarray] = []
         self.stats = PolicyStats()
 
+    def observe(self, achieved: list[float]) -> None:
+        """Driver feedback: per-replica achieved/expected service for the
+        last span; the orchestrator's EWMA health shifts the next span's
+        assignment away from stragglers."""
+        self.orch.observe_health(achieved)
+
     def _predict(self, observed: np.ndarray) -> np.ndarray:
         self.history.append(observed)
         if self.predictor is None:

@@ -1,0 +1,337 @@
+"""ClusterRuntime: execute orchestrator span plans on real serving engines.
+
+This is the bridge between the analytical OServe stack (``core.orchestrator``
+search + switch planning) and real JAX compute (``serving.engine``): a
+``SpanPlan``'s heterogeneous deployment is materialized as N live
+``ServingEngine`` replicas partitioning one shared device ``BlockPool`` —
+a replica's chip count scales its KV-block quota, its concurrency
+(``max_seqs``), and its per-sequence context ceiling, so a 1-chip replica
+really is a smaller server than a 4-chip one.
+
+Per span, typed requests are routed through any ``Router`` policy
+(``FlowRouter`` realizes the plan's x[k][j] fractions), every replica is
+stepped round-robin on the host, and ``finish_span`` feeds two observations
+back to the orchestrator:
+
+  * ``observe_health`` — per-replica achieved/expected throughput (tokens
+    emitted per busy slot-tick), so a straggling replica's EWMA health
+    shrinks its capacity in the next assignment and traffic routes around
+    it;
+  * ``observe_rates`` — realized per-type arrival counts, an EWMA the
+    driver can blend with (or substitute for) the workload predictor.
+
+At a span boundary, ``apply_plan`` executes the deployment switch for real
+instead of simulating its cost: replicas whose ``ReplicaConfig`` changed
+(per the plan) stop admitting, run a bounded **drain** window so short
+sequences finish in place, **export** the rest as host token snapshots
+(prompt + generated so far), release their pool blocks, and are rebuilt
+under the new configuration; exported requests are re-routed through the
+new assignment and **resume via re-prefill** on their target replica —
+token-for-token identical to an uninterrupted run under greedy decoding.
+Unchanged replicas keep serving throughout.
+
+``set_throttle`` injects a straggler (a replica that only steps a fraction
+of the ticks) for chaos/regression testing of the health feedback loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import ReplicaConfig
+from repro.models.config import ModelConfig
+from repro.serving.engine import (EngineRequest, InflightSnapshot,
+                                  ServingEngine, head_pad_for,
+                                  resolve_attn_impl)
+from repro.serving.kvcache import BlockPool
+from repro.serving.router import FlowRouter, Router
+
+
+@dataclasses.dataclass
+class ReplicaHandle:
+    """One live replica: its plan config, engine, and span counters."""
+    index: int
+    rc: ReplicaConfig
+    engine: ServingEngine
+    # health accounting (reset each span)
+    slot_ticks: int = 0         # sum over ticks of busy slots (expected work)
+    emitted_span: int = 0       # tokens actually emitted this span
+    # straggler injection: step only every `period`-th tick
+    period: int = 1
+
+
+@dataclasses.dataclass
+class SwitchReport:
+    """What a deployment switch actually did to live requests."""
+    changed: list[int]          # replica indices rebuilt
+    drained: int                # requests that finished inside the drain window
+    migrated: int               # in-flight requests resumed on a new replica
+    requeued: int               # queued (never-admitted) requests re-routed
+
+    @property
+    def moved(self) -> int:
+        return self.migrated + self.requeued
+
+
+@dataclasses.dataclass
+class SpanReport:
+    """Observed span outcome (also what gets fed back to the orchestrator)."""
+    achieved_fraction: list[float]   # per-replica achieved/expected throughput
+    tokens: list[int]                # per-replica tokens emitted
+    completed: int                   # requests finished this span
+    type_counts: np.ndarray          # realized per-type arrivals [J]
+
+
+class ClusterRuntime:
+    def __init__(self, cfg: ModelConfig, params, orch=None, *,
+                 total_chips: int | None = None, blocks_per_chip: int = 32,
+                 seqs_per_chip: int = 2, block_size: int = 16,
+                 router: Router | None = None, drain_steps: int = 4,
+                 decode_mode: str = "paged", attn_impl: str = "auto",
+                 dtype=jnp.float32, seed: int = 0):
+        """Args:
+          cfg/params: the (one) model every replica serves — heterogeneity
+            is in per-replica capacity, not weights.
+          orch: optional ``core.orchestrator.Orchestrator``; when present,
+            ``finish_span`` feeds it health + realized rates.
+          total_chips: pool sizing when no orchestrator is attached.
+          blocks_per_chip / seqs_per_chip: how a replica's chip count maps
+            to its KV quota and concurrency.
+          drain_steps: switch-time drain window (engine steps) before
+            in-flight sequences are exported and migrated.
+        """
+        if total_chips is None:
+            if orch is None:
+                raise ValueError("need total_chips when no orchestrator")
+            total_chips = orch.cluster.chips
+        self.cfg = cfg
+        self.params = params
+        self.orch = orch
+        self.total_chips = total_chips
+        self.blocks_per_chip = blocks_per_chip
+        self.seqs_per_chip = seqs_per_chip
+        self.block_size = block_size
+        self.drain_steps = drain_steps
+        self.decode_mode = decode_mode
+        self.attn_impl, _ = resolve_attn_impl(attn_impl)
+        self.dtype = dtype
+        self.seed = seed
+        self.pool = BlockPool(cfg, blocks_per_chip * total_chips, block_size,
+                              dtype, head_pad_for(self.attn_impl))
+        self.router: Router = router if router is not None else FlowRouter(
+            [[1.0]])
+        self.replicas: list[ReplicaHandle] = []
+        self.results: dict[int, EngineRequest] = {}   # rid -> finished request
+        self.rid_type: dict[int, int] = {}
+        self.rid_owner: dict[int, int] = {}
+        self.n_types = 1
+        self._tick = 0
+        self._span_completed = 0
+        self._span_type_counts = np.zeros(1)
+        self.switch_reports: list[SwitchReport] = []
+
+    # -- replica materialization ----------------------------------------------
+
+    def _sizing(self, rc: ReplicaConfig) -> tuple[int, int, int]:
+        """chips -> (max_seqs, kv_quota, max_blocks_per_seq)."""
+        quota = self.blocks_per_chip * rc.chips
+        max_seqs = max(1, self.seqs_per_chip * rc.chips)
+        cfg_cap = self.cfg.max_seq_len // self.block_size
+        # a small replica also has a smaller per-sequence context ceiling:
+        # one sequence may use at most its replica's whole block quota
+        max_bps = max(1, min(cfg_cap, quota))
+        return max_seqs, quota, max_bps
+
+    def _build_engine(self, rc: ReplicaConfig) -> ServingEngine:
+        max_seqs, quota, max_bps = self._sizing(rc)
+        return ServingEngine(
+            self.cfg, self.params, block_size=self.block_size,
+            max_seqs=max_seqs, dtype=self.dtype, greedy=True, seed=self.seed,
+            decode_mode=self.decode_mode, attn_impl=self.attn_impl,
+            pool=self.pool, kv_quota=quota, max_blocks_per_seq=max_bps)
+
+    # -- span plan execution ----------------------------------------------------
+
+    def apply_plan(self, plan) -> SwitchReport:
+        """Materialize a span plan (``SpanPlan`` or anything with
+        ``.deployment`` + ``.fractions``); executes the deployment switch on
+        live engines when the configuration changed."""
+        new_rcs = list(plan.deployment.replicas)
+        self.n_types = len(plan.fractions[0]) if plan.fractions else 1
+        if len(self._span_type_counts) != self.n_types:
+            self._span_type_counts = np.zeros(self.n_types)
+        old = self.replicas
+        changed = [k for k in range(len(new_rcs))
+                   if k >= len(old) or old[k].rc != new_rcs[k]]
+        torn_down = [old[k] for k in changed if k < len(old)]
+        torn_down += old[len(new_rcs):]            # shrink: dropped replicas
+
+        # 0) fail fast, before touching any engine: every request that may
+        #    need migration must fit some replica of the new deployment
+        #    (heterogeneous context ceilings), or the switch would strand it
+        #    mid-way.  Conservative: requests that would finish in the drain
+        #    window are counted too.
+        ceilings = []
+        for rc in new_rcs:
+            _, quota, max_bps = self._sizing(rc)
+            ceilings.append(min(max_bps, quota))
+        stranded = []
+        for h in torn_down:
+            reqs = list(h.engine.active.values()) + list(h.engine.waiting)
+            for r in reqs:
+                ctx = len(r.prompt) + len(r.generated)
+                remaining = r.max_new_tokens - len(r.generated)
+                need = -(-(ctx + remaining - 1) // self.block_size)
+                if all(need > c for c in ceilings):
+                    stranded.append(r.rid)
+        if stranded:
+            raise ValueError(
+                f"deployment switch would strand requests {stranded}: no "
+                f"replica in the new deployment has a context ceiling large "
+                f"enough to resume them; re-plan or drain first (no engine "
+                f"state was modified)")
+
+        # 1) drain window: short in-flight sequences finish on their source
+        drained = 0
+        migrate: list[InflightSnapshot] = []
+        for h in torn_down:
+            h.engine.pause_admission()
+            for r in h.engine.drain(self.drain_steps):
+                self._record_finish(r)
+                drained += 1
+            # 2) snapshot what's left and release the replica's pool blocks
+            migrate.extend(h.engine.export_inflight())
+            h.engine.release_all()
+
+        # 3) rebuild changed replicas under the new configuration
+        self.replicas = [
+            old[k] if k not in changed and k < len(old)
+            else ReplicaHandle(k, new_rcs[k], self._build_engine(new_rcs[k]))
+            for k in range(len(new_rcs))
+        ]
+        self.router.reconfigure(plan.fractions)
+
+        # 4) re-route exported requests through the new assignment; in-flight
+        #    ones resume via re-prefill on their new replica.  Routing is
+        #    capacity-masked: a snapshot only goes to a replica whose context
+        #    ceiling can hold it (heterogeneous replicas differ here).
+        migrated = requeued = 0
+        for snap in migrate:
+            ctx = len(snap.prompt) + len(snap.generated)
+            remaining = snap.max_new_tokens - len(snap.generated)
+            k = self._route(self.rid_type.get(snap.rid, 0), ctx, remaining)
+            if k < 0:   # unreachable: the pre-check above already validated
+                raise RuntimeError(
+                    f"request {snap.rid} unplaceable despite pre-check")
+            self.replicas[k].engine.import_inflight([snap])
+            self.rid_owner[snap.rid] = k
+            if snap.generated:
+                migrated += 1
+            else:
+                requeued += 1
+        report = SwitchReport(changed, drained, migrated, requeued)
+        self.switch_reports.append(report)
+        return report
+
+    # -- request flow -----------------------------------------------------------
+
+    def _route(self, type_id: int, ctx_len: int, new_tokens: int) -> int:
+        """Pick an admitting replica whose context ceiling fits the request;
+        -1 when no replica can ever serve it (router state untouched)."""
+        up = np.array([h.engine.admitting
+                       and h.engine.fits(ctx_len, new_tokens)
+                       for h in self.replicas])
+        if not up.any():
+            return -1
+        self.router.update_loads(
+            [h.engine.load_stats()["load"] for h in self.replicas])
+        return self.router.route(type_id, up)
+
+    def submit(self, rid: int, prompt: np.ndarray, max_new_tokens: int,
+               type_id: int = 0) -> int:
+        """Route one typed request to a replica; returns the replica index."""
+        if not self.replicas:
+            raise RuntimeError("no deployment applied yet (call apply_plan)")
+        k = self._route(type_id, len(prompt), max_new_tokens)
+        if k < 0:
+            raise ValueError(
+                f"request {rid}: context {len(prompt)} + {max_new_tokens} "
+                f"new tokens exceeds every replica's context ceiling")
+        self.replicas[k].engine.submit(rid, prompt, max_new_tokens)
+        # book-keep only after the engine accepted the request, so rejected
+        # submissions don't pollute the observed-rate feedback
+        self.rid_type[rid] = type_id
+        if type_id < self.n_types:
+            self._span_type_counts[type_id] += 1
+        self.rid_owner[rid] = k
+        return k
+
+    def _record_finish(self, r: EngineRequest) -> None:
+        self.results[r.rid] = r
+        self._span_completed += 1
+
+    def step(self) -> list[EngineRequest]:
+        """One cluster tick: step every replica that has work (round-robin)."""
+        self._tick += 1
+        finished: list[EngineRequest] = []
+        for h in self.replicas:
+            eng = h.engine
+            busy = len(eng.active)
+            h.slot_ticks += busy          # expected: ~1 token / slot / tick
+            if not (eng.active or (eng.waiting and eng.admitting)):
+                continue
+            if h.period > 1 and self._tick % h.period:
+                continue                  # injected straggler skips this tick
+            t0 = eng.tokens_out
+            for r in eng.step():
+                self._record_finish(r)
+                finished.append(r)
+            h.emitted_span += eng.tokens_out - t0
+        return finished
+
+    @property
+    def pending(self) -> int:
+        return sum(len(h.engine.waiting) + len(h.engine.active)
+                   for h in self.replicas)
+
+    def run_until_idle(self, max_ticks: int = 10_000) -> list[EngineRequest]:
+        finished = []
+        ticks = 0
+        while self.pending and ticks < max_ticks:
+            finished.extend(self.step())
+            ticks += 1
+        return finished
+
+    # -- observation / feedback -------------------------------------------------
+
+    def set_throttle(self, k: int, fraction: float) -> None:
+        """Make replica ``k`` a straggler: it steps only ``fraction`` of the
+        cluster ticks (chaos injection for the health feedback loop)."""
+        self.replicas[k].period = max(1, int(round(1.0 / max(fraction, 1e-6))))
+
+    def load_stats(self) -> list[dict]:
+        return [h.engine.load_stats() for h in self.replicas]
+
+    def finish_span(self) -> SpanReport:
+        """Close the span: report achieved/expected throughput per replica
+        and realized per-type rates back to the orchestrator."""
+        achieved = []
+        for h in self.replicas:
+            if h.slot_ticks == 0:
+                achieved.append(1.0)     # idle replica: no evidence of harm
+            else:
+                achieved.append(min(1.0, h.emitted_span / h.slot_ticks))
+        report = SpanReport(achieved, [h.emitted_span for h in self.replicas],
+                            self._span_completed,
+                            self._span_type_counts.copy())
+        if self.orch is not None:
+            self.orch.observe_health(achieved)
+            self.orch.observe_rates(self._span_type_counts)
+        for h in self.replicas:
+            h.slot_ticks = 0
+            h.emitted_span = 0
+        self._span_completed = 0
+        self._span_type_counts = np.zeros(self.n_types)
+        return report

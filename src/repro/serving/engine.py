@@ -17,6 +17,29 @@ two page buckets, so the number of distinct compilations is
 O(log max_seqs * log max_pages) instead of one per (batch, length) shape.
 The legacy dense-gather path survives as ``decode_mode="dense"`` for A/B
 benchmarking (``benchmarks/bench_engine.py``).
+
+Replica lifecycle API (used by ``repro.serving.cluster.ClusterRuntime`` to
+execute orchestrator deployment switches on live engines):
+
+  * ``pause_admission()`` / ``resume_admission()`` — gate ``_admit`` so a
+    replica slated for reconfiguration stops taking new work while its
+    in-flight sequences keep decoding.
+  * ``drain(max_steps)`` — run admission-free steps until the active set
+    empties (or the budget runs out), finishing short sequences in place.
+  * ``export_inflight()`` — snapshot every in-flight and queued request as
+    host-side token state (original prompt + tokens generated so far) and
+    release their KV blocks back to the pool.  Token state is the whole
+    snapshot: KV pages and SSM state are *recomputed* on the target replica.
+  * ``import_inflight(snaps)`` — resume migrated requests by re-prefilling
+    ``prompt + generated`` as one context; under greedy decoding the next
+    token equals what an uninterrupted engine would have produced, so a
+    drain/rebuild/restore cycle is token-for-token transparent.
+  * ``load_stats()`` — queue depth / occupancy / block headroom for routers
+    and the cluster health loop.
+
+Engines can share one device ``BlockPool`` (``pool=`` + ``kv_quota=``): the
+cluster partitions a single allocation across heterogeneous replicas
+instead of each replica reserving a max-size cache.
 """
 from __future__ import annotations
 
@@ -30,17 +53,45 @@ from repro.models import (DecodeCache, PagedDecodeState, decode_step,
                           decode_step_paged, prefill)
 from repro.models.config import ModelConfig
 from repro.models.sampling import sample
-from repro.serving.kvcache import PagedKVCache
+from repro.serving.kvcache import BlockPool, PagedKVCache
+
+
+def resolve_attn_impl(attn_impl: str) -> tuple[str, bool]:
+    """Resolve "auto" to the backend's implementation; returns (impl, interpret)."""
+    on_tpu = jax.default_backend() == "tpu"
+    if attn_impl == "auto":
+        attn_impl = "kernel" if on_tpu else "jnp"
+    return attn_impl, attn_impl == "kernel" and not on_tpu
+
+
+def head_pad_for(attn_impl: str) -> int:
+    """Pool head_dim padding: the Pallas kernel wants lane-aligned heads."""
+    return 128 if attn_impl == "kernel" else 1
 
 
 @dataclasses.dataclass
 class EngineRequest:
     rid: int
-    prompt: np.ndarray           # int32 [S]
+    prompt: np.ndarray           # int32 [S] — the ORIGINAL prompt, always
     max_new_tokens: int
     slot: int = -1
     generated: list = dataclasses.field(default_factory=list)
     done: bool = False
+    # resumed (migrated) requests prefill prompt+generated as one context
+    ctx: np.ndarray | None = None
+
+    @property
+    def prefill_tokens(self) -> np.ndarray:
+        return self.ctx if self.ctx is not None else self.prompt
+
+
+@dataclasses.dataclass
+class InflightSnapshot:
+    """Host token state of one request, sufficient to resume it anywhere."""
+    rid: int
+    prompt: np.ndarray
+    generated: list
+    max_new_tokens: int
 
 
 def _pow2_bucket(n: int, cap: int) -> int:
@@ -52,30 +103,44 @@ class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, num_blocks: int = 512,
                  block_size: int = 16, max_seqs: int = 8,
                  dtype=jnp.float32, greedy: bool = True, seed: int = 0,
-                 decode_mode: str = "paged", attn_impl: str = "auto"):
+                 decode_mode: str = "paged", attn_impl: str = "auto",
+                 pool: BlockPool | None = None, kv_quota: int | None = None,
+                 max_blocks_per_seq: int | None = None):
         self.cfg = cfg
         self.params = params
         if decode_mode not in ("paged", "dense"):
             raise ValueError(f"unknown decode_mode {decode_mode!r}")
         self.decode_mode = decode_mode
-        on_tpu = jax.default_backend() == "tpu"
-        if attn_impl == "auto":
-            attn_impl = "kernel" if on_tpu else "jnp"
+        attn_impl, self._interpret = resolve_attn_impl(attn_impl)
         self._attn_impl = attn_impl
-        self._interpret = attn_impl == "kernel" and not on_tpu
         # the kernel path wants lane-aligned head_dim; pad the pool once at
         # allocation rather than re-padding it every decode step
-        head_pad = 128 if attn_impl == "kernel" else 1
-        self.cache = PagedKVCache.create(
-            cfg, num_blocks, block_size, max_seqs,
-            max_blocks_per_seq=cfg.max_seq_len // block_size, dtype=dtype,
-            head_pad=head_pad)
+        head_pad = head_pad_for(attn_impl)
+        if max_blocks_per_seq is None:
+            max_blocks_per_seq = cfg.max_seq_len // block_size
+        if pool is not None:
+            if pool.block_size != block_size:
+                raise ValueError(
+                    f"shared pool block_size {pool.block_size} != engine "
+                    f"block_size {block_size}")
+            if cfg.has_attn and pool.head_pad % head_pad:
+                raise ValueError(
+                    f"shared pool head_pad {pool.head_pad} incompatible with "
+                    f"attn_impl {attn_impl!r} (needs multiple of {head_pad})")
+            self.cache = PagedKVCache.from_pool(
+                pool, max_seqs, max_blocks_per_seq, quota=kv_quota)
+        else:
+            self.cache = PagedKVCache.create(
+                cfg, num_blocks, block_size, max_seqs,
+                max_blocks_per_seq=max_blocks_per_seq, dtype=dtype,
+                head_pad=head_pad)
         self.max_seqs = max_seqs
         self.dtype = dtype
         self.greedy = greedy
         self.key = jax.random.PRNGKey(seed)
         self.waiting: list[EngineRequest] = []
         self.active: dict[int, EngineRequest] = {}    # slot -> request
+        self.admitting = True
         self.steps = 0
         self.tokens_out = 0
 
@@ -121,26 +186,152 @@ class ServingEngine:
 
     # -- submission ------------------------------------------------------------
 
+    @property
+    def max_context(self) -> int:
+        """Tokens one sequence's block table can address."""
+        return self.cache.max_blocks_per_seq * self.cache.block_size
+
+    def _capacity_blocks(self) -> int:
+        """Blocks one sequence may ever hold on this replica."""
+        cap = min(self.cache.max_blocks_per_seq, self.cache.num_blocks)
+        if self.cache.quota is not None:
+            cap = min(cap, self.cache.quota)
+        return cap
+
+    def fits(self, ctx_len: int, new_tokens: int) -> bool:
+        """Can this replica *ever* serve a request of this size?  (Same
+        bound ``_validate`` enforces; used by routers to mask out replicas
+        whose context ceiling is too small.)"""
+        if new_tokens < 1:
+            return False
+        need = ctx_len + new_tokens - 1
+        bs = self.cache.block_size
+        return (need + bs - 1) // bs <= self._capacity_blocks()
+
+    def _validate(self, ctx_len: int, new_tokens: int, rid: int) -> None:
+        if new_tokens < 1:
+            raise ValueError(f"request {rid}: max_new_tokens must be >= 1")
+        # the final generated token is returned but never written to a page,
+        # so lifetime cache footprint is ctx + new - 1 positions
+        if not self.fits(ctx_len, new_tokens):
+            need = ctx_len + new_tokens - 1
+            raise ValueError(
+                f"request {rid}: context {ctx_len} + {new_tokens} new tokens "
+                f"needs {need} cache positions but this replica's "
+                f"per-sequence block capacity is "
+                f"{self._capacity_blocks()} x {self.cache.block_size} tokens")
+
     def submit(self, rid: int, prompt: np.ndarray, max_new_tokens: int) -> None:
-        self.waiting.append(EngineRequest(rid, np.asarray(prompt, np.int32),
-                                          max_new_tokens))
+        prompt = np.asarray(prompt, np.int32)
+        self._validate(len(prompt), max_new_tokens, rid)
+        self.waiting.append(EngineRequest(rid, prompt, max_new_tokens))
 
     def _free_slots(self) -> list[int]:
         return [s for s in range(self.max_seqs) if s not in self.active]
+
+    # -- replica lifecycle (cluster runtime) -----------------------------------
+
+    def pause_admission(self) -> None:
+        """Stop moving waiting requests into slots (switch in progress)."""
+        self.admitting = False
+
+    def resume_admission(self) -> None:
+        self.admitting = True
+
+    def drain(self, max_steps: int | None = None) -> list[EngineRequest]:
+        """Run admission-free steps until the active set empties.
+
+        Short in-flight sequences finish in place (the paper's drain path);
+        whatever is still running after ``max_steps`` is left for
+        ``export_inflight``.  Admission stays paused on return.
+        """
+        self.pause_admission()
+        finished: list[EngineRequest] = []
+        steps = 0
+        while self.active and (max_steps is None or steps < max_steps):
+            finished.extend(self.step())
+            steps += 1
+        return finished
+
+    def export_inflight(self) -> list[InflightSnapshot]:
+        """Snapshot and evict every in-flight + queued request.
+
+        Returns host token state only — prompt and generated tokens — and
+        releases the KV blocks.  The target replica resumes each request by
+        re-prefilling ``prompt + generated`` (see ``import_inflight``).
+        """
+        snaps: list[InflightSnapshot] = []
+        for slot in sorted(self.active):
+            r = self.active.pop(slot)
+            self.cache.release_slot(slot)
+            snaps.append(InflightSnapshot(r.rid, r.prompt,
+                                          list(r.generated),
+                                          r.max_new_tokens))
+        for r in self.waiting:
+            snaps.append(InflightSnapshot(r.rid, r.prompt,
+                                          list(r.generated),
+                                          r.max_new_tokens))
+        self.waiting = []
+        return snaps
+
+    def import_inflight(self, snaps: list[InflightSnapshot]) -> None:
+        """Resume migrated requests (re-prefill of prompt + generated).
+
+        The resumed context re-computes KV pages / SSM state here, and the
+        prefill's final-position logits produce exactly the token a decode
+        step on the source replica would have produced next (greedy).
+        """
+        for s in snaps:
+            if not s.generated:          # never prefilled: plain submission
+                self.submit(s.rid, s.prompt, s.max_new_tokens)
+                continue
+            remaining = s.max_new_tokens - len(s.generated)
+            if remaining < 1:
+                raise ValueError(f"request {s.rid}: nothing left to generate")
+            ctx = np.concatenate([np.asarray(s.prompt, np.int32),
+                                  np.asarray(s.generated, np.int32)])
+            self._validate(len(ctx), remaining, s.rid)
+            self.waiting.append(EngineRequest(
+                s.rid, np.asarray(s.prompt, np.int32), s.max_new_tokens,
+                generated=list(s.generated), ctx=ctx))
+
+    def release_all(self) -> None:
+        """Teardown: hand every block back to the (shared) pool."""
+        self.active = {}
+        self.waiting = []
+        self.cache.release_all()
+
+    def load_stats(self) -> dict:
+        """Occupancy snapshot for routers / the cluster health loop."""
+        return {
+            "waiting": len(self.waiting),
+            "active": len(self.active),
+            "max_seqs": self.max_seqs,
+            "free_blocks": self.cache.n_free_blocks,
+            "tokens_out": self.tokens_out,
+            "steps": self.steps,
+            "load": (len(self.waiting) + len(self.active)) / self.max_seqs,
+        }
 
     # -- scheduling ------------------------------------------------------------
 
     def _admit(self) -> list[EngineRequest]:
         """Move waiting requests into free slots while KV blocks remain."""
         admitted = []
+        if not self.admitting:
+            return admitted
         free = self._free_slots()
         while self.waiting and free:
             req = self.waiting[0]
-            if not self.cache.can_admit(len(req.prompt)):
+            ctx = len(req.prefill_tokens)
+            # reserve the sequence's lifetime footprint (prompt + remaining
+            # decode growth) so later extends can't exhaust the shared pool
+            total = ctx + (req.max_new_tokens - len(req.generated)) - 1
+            if not self.cache.can_admit(ctx, total_tokens=total):
                 break
             self.waiting.pop(0)
             req.slot = free.pop(0)
-            self.cache.admit(req.slot, len(req.prompt))
+            self.cache.admit(req.slot, ctx, total_tokens=total)
             self.active[req.slot] = req
             admitted.append(req)
         return admitted
@@ -150,9 +341,9 @@ class ServingEngine:
         # RoPE positions stay exact for every sequence
         by_len: dict[int, list[EngineRequest]] = {}
         for r in reqs:
-            by_len.setdefault(len(r.prompt), []).append(r)
+            by_len.setdefault(len(r.prefill_tokens), []).append(r)
         for pl, group in by_len.items():
-            toks = np.stack([r.prompt for r in group])
+            toks = np.stack([r.prefill_tokens for r in group])
             logits, cache = self._prefill(self.params, jnp.asarray(toks))
             first = self._pick(logits)           # one sync per prefill group
             for i, r in enumerate(group):

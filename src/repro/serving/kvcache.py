@@ -1,10 +1,25 @@
 """Paged KV cache (vLLM-style) in JAX — device-resident decode metadata.
 
-Storage: per layer-stacked pools ``k/v: [L, num_blocks + 1, Hkv, block,
-D]`` in kernel-native layout (the Pallas paged-decode kernel and the jnp
-fallback both read ``[page, Hkv, block, D]`` tiles without a transpose).
-Physical block ``num_blocks`` is a trash page: padded batch slots scatter
-their dummy K/V there, so the fused decode step needs no masking branches.
+Storage: ``BlockPool`` owns the per layer-stacked pools ``k/v: [L,
+num_blocks + 1, Hkv, block, D]`` in kernel-native layout (the Pallas
+paged-decode kernel and the jnp fallback both read ``[page, Hkv, block, D]``
+tiles without a transpose) plus the host-side ``BlockAllocator``.  Physical
+block ``num_blocks`` is a trash page: padded batch slots scatter their dummy
+K/V there, so the fused decode step needs no masking branches.
+
+A ``PagedKVCache`` is one replica's *view* of a pool: per-slot block tables,
+sequence lengths, and SSM state.  ``PagedKVCache.create`` builds a private
+pool (single-replica engines, unchanged seed behavior);
+``PagedKVCache.from_pool`` attaches to a shared pool so N replicas of a
+``ClusterRuntime`` partition one device allocation instead of each reserving
+a max-size cache.  A shared view carries a block ``quota`` — its slice of
+the pool — so one replica cannot starve the others.  Enforcement is by
+*reservation*: ``admit(slot, prompt_len, total_tokens)`` reserves the
+sequence's full lifetime block count (prompt + decode growth) against both
+the view quota and the pool, so later ``extend`` calls always draw from
+already-reserved capacity and in-quota decode can never exhaust a sibling
+replica's share.  The allocator stays the single source of truth for
+physical ownership.
 
 The host-side ``BlockAllocator`` remains the source of truth for block
 ownership; ``block_table``/``seq_lens`` (host numpy) mirror it for the
@@ -61,55 +76,128 @@ class BlockAllocator:
         return len(self.free)
 
 
+class BlockPool:
+    """Device K/V block pool + allocator, shareable across replica caches.
+
+    Replica caches read and functionally update ``pool.k`` / ``pool.v``
+    through their ``PagedKVCache.k`` properties; because a host scheduler
+    steps replicas sequentially, every view always sees the latest arrays.
+    """
+
+    def __init__(self, cfg: ModelConfig, num_blocks: int,
+                 block_size: int = 16, dtype=jnp.float32, head_pad: int = 1):
+        self.cfg = cfg
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self.dtype = dtype
+        self.head_pad = head_pad
+        self.k = self.v = None
+        if cfg.has_attn:
+            # head_pad > 1 (the Pallas kernel path) pads head_dim once at
+            # allocation so the per-step kernel call never re-pads the pool
+            d_pool = -(-cfg.head_dim // head_pad) * head_pad
+            shape = (cfg.n_layers, num_blocks + 1, cfg.n_kv_heads,
+                     block_size, d_pool)
+            self.k = jnp.zeros(shape, dtype)
+            self.v = jnp.zeros(shape, dtype)
+        self.allocator = BlockAllocator(num_blocks)
+        self.reserved = 0           # blocks promised to admitted sequences
+
+    @property
+    def trash_page(self) -> int:
+        return self.num_blocks
+
+
 @dataclasses.dataclass
 class PagedKVCache:
     cfg: ModelConfig
     block_size: int
-    num_blocks: int
+    num_blocks: int             # pool-wide physical block count
     max_seqs: int
     max_blocks_per_seq: int
-    k: jax.Array        # [L, num_blocks + 1, Hkv, block, D] (+1 = trash page)
-    v: jax.Array
+    pool: BlockPool             # owns k/v [L, num_blocks + 1, Hkv, block, D]
     ssm: jax.Array | None       # [L, max_seqs + 1, ...] (+1 = trash row)
     conv: jax.Array | None
     block_table: np.ndarray     # host [max_seqs, max_blocks_per_seq] int32
     seq_lens: np.ndarray        # host [max_seqs] int32
     block_table_dev: jax.Array  # device [max_seqs + 1, max_blocks_per_seq]
     seq_lens_dev: jax.Array     # device [max_seqs + 1]
-    allocator: BlockAllocator
     seq_blocks: dict            # slot -> list[int]
+    quota: int | None = None    # shared pool: this view's block budget
+    used_blocks: int = 0
+    reserved_blocks: int = 0    # admitted sequences' lifetime reservations
+    seq_reserved: dict = dataclasses.field(default_factory=dict)
 
     @classmethod
     def create(cls, cfg: ModelConfig, num_blocks: int = 256,
                block_size: int = 16, max_seqs: int = 16,
                max_blocks_per_seq: int = 64, dtype=jnp.float32,
                head_pad: int = 1) -> "PagedKVCache":
+        """Single-replica cache over a private pool."""
+        pool = BlockPool(cfg, num_blocks, block_size, dtype, head_pad)
+        return cls.from_pool(pool, max_seqs, max_blocks_per_seq, quota=None)
+
+    @classmethod
+    def from_pool(cls, pool: BlockPool, max_seqs: int,
+                  max_blocks_per_seq: int,
+                  quota: int | None = None) -> "PagedKVCache":
+        """A replica view over a (possibly shared) pool.
+
+        ``quota`` caps how many pool blocks this view may hold at once; None
+        means the whole pool (private-pool behavior).
+        """
+        cfg = pool.cfg
         L = cfg.n_layers
-        k = v = ssm = conv = None
-        if cfg.has_attn:
-            # head_pad > 1 (the Pallas kernel path) pads head_dim once at
-            # allocation so the per-step kernel call never re-pads the pool
-            d_pool = -(-cfg.head_dim // head_pad) * head_pad
-            shape = (L, num_blocks + 1, cfg.n_kv_heads, block_size, d_pool)
-            k = jnp.zeros(shape, dtype)
-            v = jnp.zeros(shape, dtype)
+        ssm = conv = None
         if cfg.has_ssm:
             from repro.models.ssm import conv_channels
             ssm = jnp.zeros((L, max_seqs + 1, cfg.ssm_heads, cfg.ssm_head_dim,
                              cfg.ssm_state), jnp.float32)
             conv = jnp.zeros((L, max_seqs + 1, cfg.ssm_conv_width - 1,
-                              conv_channels(cfg)), dtype)
+                              conv_channels(cfg)), pool.dtype)
         # device tables start pointing at the trash page so un-admitted /
         # padded rows gather zeros and scatter into the trash page
-        table_dev = jnp.full((max_seqs + 1, max_blocks_per_seq), num_blocks,
-                             jnp.int32)
+        table_dev = jnp.full((max_seqs + 1, max_blocks_per_seq),
+                             pool.trash_page, jnp.int32)
         lens_dev = jnp.zeros((max_seqs + 1,), jnp.int32)
-        return cls(cfg, block_size, num_blocks, max_seqs, max_blocks_per_seq,
-                   k, v, ssm, conv,
+        return cls(cfg, pool.block_size, pool.num_blocks, max_seqs,
+                   max_blocks_per_seq, pool, ssm, conv,
                    np.zeros((max_seqs, max_blocks_per_seq), np.int32),
                    np.zeros(max_seqs, np.int32),
-                   table_dev, lens_dev,
-                   BlockAllocator(num_blocks), {})
+                   table_dev, lens_dev, {}, quota)
+
+    # -- pool delegation ------------------------------------------------------
+
+    @property
+    def k(self) -> jax.Array | None:
+        return self.pool.k
+
+    @k.setter
+    def k(self, value) -> None:
+        self.pool.k = value
+
+    @property
+    def v(self) -> jax.Array | None:
+        return self.pool.v
+
+    @v.setter
+    def v(self, value) -> None:
+        self.pool.v = value
+
+    @property
+    def allocator(self) -> BlockAllocator:
+        return self.pool.allocator
+
+    @property
+    def n_free_blocks(self) -> int:
+        """Blocks this view may still *reserve* (quota- and pool-limited)."""
+        n = self.pool.num_blocks - self.pool.reserved
+        if self.quota is not None:
+            n = min(n, self.quota - self.reserved_blocks)
+        return n
+
+    def _blocks(self, tokens: int) -> int:
+        return (tokens + self.block_size - 1) // self.block_size
 
     @property
     def trash_slot(self) -> int:
@@ -118,9 +206,18 @@ class PagedKVCache:
 
     # -- slot lifecycle -------------------------------------------------------
 
-    def admit(self, slot: int, prompt_len: int) -> None:
-        n = (prompt_len + self.block_size - 1) // self.block_size
+    def admit(self, slot: int, prompt_len: int,
+              total_tokens: int | None = None) -> None:
+        """Admit one sequence: allocate its prompt blocks now and *reserve*
+        its full lifetime block count (``total_tokens``, defaulting to just
+        the prompt) so quota-respecting decode growth can never fail."""
+        n = self._blocks(prompt_len)
+        reserve = max(n, self._blocks(total_tokens or prompt_len))
         blocks = self.allocator.alloc(n)
+        self.used_blocks += n
+        self.reserved_blocks += reserve
+        self.pool.reserved += reserve
+        self.seq_reserved[slot] = reserve
         self.seq_blocks[slot] = blocks
         self.block_table[slot, :] = 0
         self.block_table[slot, :n] = blocks
@@ -132,9 +229,14 @@ class PagedKVCache:
             jnp.asarray(row))
         self.seq_lens_dev = self.seq_lens_dev.at[slot].set(prompt_len)
 
-    def can_admit(self, prompt_len: int, headroom_blocks: int = 2) -> bool:
-        n = (prompt_len + self.block_size - 1) // self.block_size
-        return self.allocator.n_free >= n + headroom_blocks
+    def can_admit(self, prompt_len: int, total_tokens: int | None = None,
+                  headroom_blocks: int = 2) -> bool:
+        """With ``total_tokens`` (prompt + expected decode growth) the check
+        is a firm reservation; without it, legacy prompt + headroom."""
+        if total_tokens is not None:
+            return self.n_free_blocks >= max(self._blocks(prompt_len),
+                                             self._blocks(total_tokens))
+        return self.n_free_blocks >= self._blocks(prompt_len) + headroom_blocks
 
     def extend(self, slot: int) -> None:
         """Ensure capacity for one more token.
@@ -148,7 +250,20 @@ class PagedKVCache:
         if new_len > n_have * self.block_size:
             if n_have >= self.max_blocks_per_seq:
                 raise MemoryError("sequence exceeds max_blocks_per_seq")
+            if n_have >= self.seq_reserved.get(slot, 0):
+                # growth beyond the admission reservation (legacy
+                # prompt-only admits): extend the reservation, but never
+                # into another view's quota
+                if (self.quota is not None
+                        and self.reserved_blocks >= self.quota):
+                    raise MemoryError("replica KV quota exceeded")
+                if self.pool.reserved >= self.pool.num_blocks:
+                    raise MemoryError("KV pool fully reserved")
+                self.reserved_blocks += 1
+                self.pool.reserved += 1
+                self.seq_reserved[slot] = n_have + 1
             b = self.allocator.alloc(1)[0]
+            self.used_blocks += 1
             self.seq_blocks[slot].append(b)
             self.block_table[slot, n_have] = b
             # incremental device sync: single-element scatter on page crossing
@@ -156,12 +271,22 @@ class PagedKVCache:
         self.seq_lens[slot] = new_len
 
     def release_slot(self, slot: int) -> None:
-        self.allocator.release(self.seq_blocks.pop(slot, []))
+        blocks = self.seq_blocks.pop(slot, [])
+        self.allocator.release(blocks)
+        self.used_blocks -= len(blocks)
+        reserve = self.seq_reserved.pop(slot, len(blocks))
+        self.reserved_blocks -= reserve
+        self.pool.reserved -= reserve
         self.seq_lens[slot] = 0
         self.block_table[slot, :] = 0
         self.block_table_dev = self.block_table_dev.at[slot].set(
             self.num_blocks)
         self.seq_lens_dev = self.seq_lens_dev.at[slot].set(0)
+
+    def release_all(self) -> None:
+        """Return every block this view holds to the pool (replica teardown)."""
+        for slot in list(self.seq_blocks):
+            self.release_slot(slot)
 
     # -- device views ----------------------------------------------------------
 

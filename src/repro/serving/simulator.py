@@ -38,6 +38,10 @@ class SpanDecision:
 class Policy(Protocol):
     def decide(self, span: int, rates: np.ndarray, current: Deployment | None
                ) -> SpanDecision: ...
+    # Policies may also define observe(achieved: list[float]) — the driver
+    # reports each replica's achieved/expected service fraction for the span
+    # that just ended (requests that began service / requests routed), the
+    # same health signal ClusterRuntime feeds Orchestrator.observe_health.
 
 
 @dataclasses.dataclass
@@ -117,6 +121,7 @@ def simulate(
 
     deployment: Deployment | None = None
     replicas: list[_ReplicaSim] = []
+    span_routed: list[list[int]] = []     # [k] -> request idx routed this span
     perf: list[list] = []
     response: list[list[float]] = []   # [k][j] residence under the blend
     fractions = None
@@ -195,6 +200,15 @@ def simulate(
         if kind == "span":
             s = payload
             rates = counts[s]
+            # report the ended span's per-replica achieved fraction (requests
+            # that began service / requests routed) before the next decision
+            observe = getattr(policy, "observe", None)
+            if observe is not None and replicas and any(span_routed):
+                achieved = [
+                    (sum(1 for i in routed if requests[i].start >= 0)
+                     / len(routed)) if routed else 1.0
+                    for routed in span_routed]
+                observe(achieved)
             decision = policy.decide(s, rates, deployment)
             new_dep = decision.deployment
             fracs = np.asarray(decision.fractions, dtype=np.float64)
@@ -213,12 +227,14 @@ def simulate(
                 sent = np.zeros((K, J))
                 seen = np.zeros(J)
                 fractions = fracs
+                span_routed = [[] for _ in replicas]
                 # re-route carried-over requests through the new assignment
                 # (KV migrated per paper S4.2)
                 for item in sorted(i for q in old_queues for i in q):
                     r = requests[item[1]]
                     k = route(r, now)
                     heapq.heappush(replicas[k].queue, item)
+                    span_routed[k].append(item[1])
                     resp = response[k][r.type_id]
                     if resp != float("inf"):
                         replicas[k].work_queued += resp
@@ -227,6 +243,7 @@ def simulate(
                 slot_counts = configure(deployment, fracs, rates)
                 for k, rep in enumerate(replicas):
                     rep.slots = slot_counts[k]
+                span_routed = [[] for _ in replicas]
             deployments_log.append(str(deployment))
             for k in range(len(replicas)):
                 start_next(k, now)
@@ -245,6 +262,7 @@ def simulate(
             r.replica = k
             rep.work_queued += resp
             heapq.heappush(rep.queue, (r.arrival, payload))
+            span_routed[k].append(payload)
             start_next(k, now)
         else:  # free
             if payload < len(replicas):

@@ -1,0 +1,119 @@
+"""Real-compute validation driver: orchestrator plans on live engines.
+
+Shared by ``examples/serve_orchestrated.py --real`` and
+``benchmarks/bench_e2e.real_validation`` so the two surfaces cannot drift:
+plans are made by the real ``Orchestrator`` against the paper-scale cost
+model, executed by ``ClusterRuntime`` on a smoke-scale model (CPU-sized),
+and each span's planner-predicted per-replica traffic share is scored
+against the share the engines actually served.
+
+The requests executed are tiny per-type stand-ins of the paper archetypes,
+so the comparison is about routing shares, switch execution (drain /
+migrate counters), and the health/rate feedback loop — not absolute
+throughput.  Requests deliberately remain in flight across span boundaries
+(no mid-run flush) so every deployment change exercises the live
+drain/export/migrate path, not an idle-cluster rebuild.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core.types import WorkloadType
+
+# Paper-scale archetypes used for *planning*; per-type tiny stand-ins for
+# *execution* on the smoke model.
+REAL_ARCHETYPES = [WorkloadType(1275, 287), WorkloadType(139, 133),
+                   WorkloadType(1181, 1824), WorkloadType(282, 1121)]
+REAL_PROMPT_LEN = [14, 6, 12, 8]
+REAL_NEW_TOKENS = [4, 4, 8, 6]
+# alternate between a short-task-heavy and a long-output-heavy mix so the
+# orchestrator has a reason to re-deploy mid-run
+REAL_SPAN_RATES = ([5, 300, 2, 3], [40, 10, 60, 40])
+
+
+@dataclasses.dataclass
+class RealSpanOutcome:
+    span: int
+    plan: object                  # core.orchestrator.SpanPlan
+    switch: object                # serving.cluster.SwitchReport
+    report: object                # serving.cluster.SpanReport
+    predicted_share: np.ndarray   # planner fractions @ rates, normalized
+    achieved_share: np.ndarray    # tokens actually served per replica
+    observed_rates: np.ndarray    # orchestrator's per-type EWMA after span
+    n_requests: int
+    seconds: float
+
+    @property
+    def share_l1(self) -> float:
+        return float(np.abs(self.predicted_share - self.achieved_share).sum())
+
+
+def run_real_spans(model: str = "opt-30b", chips: int = 6, n_spans: int = 2,
+                   requests_per_span: int = 6, seed: int = 0
+                   ) -> tuple[list[RealSpanOutcome], "object"]:
+    """Drive ``n_spans`` orchestrator plans through a real ClusterRuntime.
+
+    Returns the per-span outcomes and the runtime (whose ``results`` hold
+    every finished request for parity / completeness checks).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config, get_smoke_config
+    from repro.core.costmodel import CostModel
+    from repro.core.orchestrator import Orchestrator, OrchestratorConfig
+    from repro.core.types import ClusterSpec, H100_SPEC
+    from repro.models import init_params
+    from repro.serving.cluster import ClusterRuntime
+
+    cfg = get_smoke_config(model)
+    params = init_params(cfg, jax.random.PRNGKey(seed), jnp.float32)
+    cm = CostModel(get_config(model).profile(), hw=H100_SPEC)
+    orch = Orchestrator(cm, ClusterSpec(chips, hw=H100_SPEC),
+                        OrchestratorConfig(search_patience=8))
+    runtime = ClusterRuntime(cfg, params, orch, blocks_per_chip=16,
+                             seqs_per_chip=1, block_size=8, drain_steps=2,
+                             seed=seed)
+    rng = np.random.RandomState(seed)
+    outcomes: list[RealSpanOutcome] = []
+    rid = 0
+    for s in range(n_spans):
+        t0 = time.time()
+        rates = REAL_SPAN_RATES[s % len(REAL_SPAN_RATES)]
+        ws = [a.with_rate(float(r)) for a, r in zip(REAL_ARCHETYPES, rates)]
+        plan = orch.plan_span(ws)
+        switch = runtime.apply_plan(plan)
+        types = rng.choice(4, size=requests_per_span,
+                           p=np.asarray(rates, float) / np.sum(rates))
+        for t in types:
+            t = int(t)
+            prompt = rng.randint(0, cfg.vocab_size,
+                                 REAL_PROMPT_LEN[t]).astype(np.int32)
+            runtime.submit(rid, prompt, REAL_NEW_TOKENS[t], type_id=t)
+            rid += 1
+            runtime.step(); runtime.step()
+        # do NOT run to idle mid-run: later requests stay in flight across
+        # the span boundary so the next apply_plan exercises the live
+        # drain/migrate switch path; only the last span flushes everything
+        if s == n_spans - 1:
+            runtime.run_until_idle()
+        report = runtime.finish_span()
+        frac = np.array(plan.fractions)
+        # score in *token* shares on both sides: the plan's request fractions
+        # are weighted by each type's decode length so the predicted share is
+        # comparable to the tokens the replicas actually emitted (carryover
+        # from the previous span adds a little noise — this is a smoke
+        # metric, not a benchmark)
+        load = frac @ (np.asarray(rates, float)
+                       * np.asarray(REAL_NEW_TOKENS, float))
+        predicted = load / max(load.sum(), 1e-9)
+        achieved = (np.asarray(report.tokens, float)
+                    / max(sum(report.tokens), 1))
+        outcomes.append(RealSpanOutcome(
+            s, plan, switch, report, predicted, achieved,
+            np.array(orch.observed_rates), requests_per_span,
+            time.time() - t0))
+    return outcomes, runtime

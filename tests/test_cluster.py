@@ -1,0 +1,395 @@
+"""ClusterRuntime: orchestrator plans executed on real engines.
+
+Covers the acceptance path (Orchestrator -> ClusterRuntime, heterogeneous
+replicas, an executed deployment switch, token parity with an uninterrupted
+engine), the replica lifecycle API (drain / export / import), the shared
+block pool, the unified router interface, submit validation, and the
+observe_health / observe_rates feedback loops.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, get_smoke_config
+from repro.core.costmodel import CostModel
+from repro.core.orchestrator import Orchestrator, OrchestratorConfig
+from repro.core.types import ClusterSpec, H100_SPEC, WorkloadType
+from repro.models import init_params
+from repro.serving.cluster import ClusterRuntime
+from repro.serving.engine import ServingEngine
+from repro.serving.kvcache import BlockPool, PagedKVCache
+from repro.serving.router import (FlowRouter, LeastLoadedRouter,
+                                  RoundRobinRouter)
+
+ARCH = [WorkloadType(1275, 287), WorkloadType(139, 133),
+        WorkloadType(1181, 1824), WorkloadType(282, 1121)]
+
+
+def ws(rates):
+    return [a.with_rate(float(r)) for a, r in zip(ARCH, rates)]
+
+
+@pytest.fixture(scope="module")
+def cfg_params():
+    cfg = get_smoke_config("yi-9b")
+    params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    return cfg, params
+
+
+def _orchestrator(chips: int) -> Orchestrator:
+    cm = CostModel(get_config("opt-30b").profile(), hw=H100_SPEC)
+    return Orchestrator(cm, ClusterSpec(chips, hw=H100_SPEC),
+                        OrchestratorConfig(search_patience=10))
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: 2 spans through Orchestrator -> ClusterRuntime, heterogeneous
+# replicas, >=1 executed switch, token parity with an uninterrupted engine.
+# ---------------------------------------------------------------------------
+
+
+def test_cluster_e2e_orchestrated_switch_token_parity(cfg_params):
+    cfg, params = cfg_params
+    orch = _orchestrator(6)
+    # drain_steps=0: everything in flight at the switch must migrate
+    rt = ClusterRuntime(cfg, params, orch, blocks_per_chip=16,
+                        seqs_per_chip=1, block_size=8, drain_steps=0)
+    rng = np.random.RandomState(0)
+    jobs = {}
+    rid = 0
+    deployments = []
+    reports = []
+    # span 0 favors short tasks; span 1 flips to long-output types
+    for rates in ([5, 300, 2, 3], [40, 10, 60, 40]):
+        plan = orch.plan_span(ws(rates))
+        deployments.append(plan.deployment)
+        reports.append(rt.apply_plan(plan))
+        for i in range(6):
+            t = int(rng.randint(0, 4))
+            prompt = rng.randint(0, cfg.vocab_size, 6 + 2 * t).astype(np.int32)
+            jobs[rid] = (prompt, 8 + t)
+            rt.submit(rid, prompt, 8 + t, type_id=t)
+            rid += 1
+        for _ in range(4):        # partial progress: in flight at span end
+            rt.step()
+        rt.finish_span()
+    rt.run_until_idle()
+
+    # the switch actually happened, onto a heterogeneous deployment
+    assert deployments[0].replicas != deployments[1].replicas
+    assert len(set(deployments[1].replicas)) >= 2, "not heterogeneous"
+    switch = reports[1]
+    assert switch.changed, "no replica was rebuilt"
+    assert switch.migrated >= 1, "no in-flight request was migrated"
+
+    # every request completed with the tokens an uninterrupted single
+    # engine produces (greedy, same params)
+    assert len(rt.results) == rid
+    ref = ServingEngine(cfg, params, num_blocks=256, block_size=8, max_seqs=8)
+    for r, (prompt, n) in jobs.items():
+        ref.submit(r, prompt, n)
+    expected = {r.rid: r.generated for r in ref.run_to_completion()}
+    for r in range(rid):
+        assert rt.results[r].generated == expected[r], f"rid {r} diverged"
+
+
+# ---------------------------------------------------------------------------
+# Engine lifecycle: drain / export / import parity (incl. paged kernel path).
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("attn_impl", ["jnp", "kernel"])
+def test_engine_drain_export_import_parity(cfg_params, attn_impl):
+    cfg, params = cfg_params
+    rng = np.random.RandomState(1)
+    jobs = [(rng.randint(0, cfg.vocab_size, n).astype(np.int32), new)
+            for n, new in ((8, 7), (8, 9), (12, 6))]
+
+    def fresh(max_seqs=4):
+        return ServingEngine(cfg, params, num_blocks=64, block_size=8,
+                             max_seqs=max_seqs, attn_impl=attn_impl)
+
+    eng = fresh()
+    for i, (p, n) in enumerate(jobs):
+        eng.submit(i, p, n)
+    expected = {r.rid: r.generated for r in eng.run_to_completion()}
+
+    # interrupted: a few live steps, bounded drain, export the rest, resume
+    # on a freshly built engine
+    src = fresh()
+    for i, (p, n) in enumerate(jobs):
+        src.submit(i, p, n)
+    got = {}
+    for _ in range(3):
+        for r in src.step():
+            got[r.rid] = r.generated
+    for r in src.drain(max_steps=2):          # short sequences finish here
+        got[r.rid] = r.generated
+    snaps = src.export_inflight()
+    assert snaps, "expected sequences still in flight after the drain window"
+    assert src.cache.allocator.n_free == 64   # exported blocks released
+    assert all(s.generated for s in snaps)    # all were mid-generation
+    dst = fresh()
+    dst.import_inflight(snaps)
+    for r in dst.run_to_completion():
+        got[r.rid] = r.generated
+    assert got == expected
+
+
+def test_drain_finishes_all_without_budget(cfg_params):
+    cfg, params = cfg_params
+    eng = ServingEngine(cfg, params, num_blocks=64, block_size=8, max_seqs=2)
+    rng = np.random.RandomState(2)
+    eng.submit(0, rng.randint(0, cfg.vocab_size, 8).astype(np.int32), 5)
+    eng.step()
+    done = eng.drain()                        # unbounded: empties the engine
+    assert [r.rid for r in done] == [0]
+    assert not eng.active and not eng.admitting
+    eng.resume_admission()
+    assert eng.admitting
+
+
+# ---------------------------------------------------------------------------
+# Submit validation: prompts that cannot fit the block table are rejected.
+# ---------------------------------------------------------------------------
+
+
+def test_submit_rejects_oversize_requests(cfg_params):
+    cfg, params = cfg_params        # smoke max_seq_len=512
+    eng = ServingEngine(cfg, params, num_blocks=64, block_size=8, max_seqs=2)
+    assert eng.max_context == 512
+    with pytest.raises(ValueError, match="block"):
+        eng.submit(0, np.zeros(600, np.int32), 4)
+    with pytest.raises(ValueError, match="block"):
+        eng.submit(1, np.zeros(500, np.int32), 20)   # 500 + 19 > 512
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        eng.submit(2, np.zeros(8, np.int32), 0)
+    assert not eng.waiting                    # nothing was half-accepted
+    eng.submit(3, np.zeros(8, np.int32), 4)   # a legal one still works
+    assert len(eng.waiting) == 1
+
+
+def test_small_replica_has_smaller_context_ceiling(cfg_params):
+    """A 1-chip replica's per-sequence context is capped by its quota."""
+    cfg, params = cfg_params
+    orch = _orchestrator(4)
+    rt = ClusterRuntime(cfg, params, orch, blocks_per_chip=8,
+                        seqs_per_chip=1, block_size=8)
+    plan = orch.plan_span(ws([5, 300, 2, 3]))
+    rt.apply_plan(plan)
+    eng = rt.replicas[0].engine
+    # 2-chip replica: quota 16 blocks -> 128-token ceiling, not 512
+    assert eng.max_context == 16 * 8
+    assert not eng.fits(200, 4)
+    # no replica can hold it -> rejected before any router/state mutation
+    with pytest.raises(ValueError, match="context ceiling"):
+        rt.submit(0, np.zeros(200, np.int32), 4, type_id=1)
+    assert rt._span_type_counts[1] == 0     # rejected: not an observed rate
+
+
+# ---------------------------------------------------------------------------
+# Shared block pool: replicas partition one device allocation.
+# ---------------------------------------------------------------------------
+
+
+def test_shared_pool_quota_partition():
+    cfg = get_smoke_config("yi-9b")
+    pool = BlockPool(cfg, num_blocks=16, block_size=4)
+    a = PagedKVCache.from_pool(pool, max_seqs=2, max_blocks_per_seq=8,
+                               quota=8)
+    b = PagedKVCache.from_pool(pool, max_seqs=2, max_blocks_per_seq=8,
+                               quota=8)
+    a.admit(0, prompt_len=24)                 # 6 of a's 8 blocks
+    assert pool.allocator.n_free == 10
+    assert a.n_free_blocks == 2               # quota-, not pool-limited
+    assert not a.can_admit(12)                # needs 3 + headroom 2 > 2
+    assert b.n_free_blocks == 8
+    assert b.can_admit(12)
+    b.admit(0, prompt_len=12)
+    assert pool.allocator.n_free == 7
+    assert pool.reserved == 9
+    a.release_all()
+    b.release_all()
+    assert pool.allocator.n_free == 16
+    assert pool.reserved == 0
+    assert a.used_blocks == b.used_blocks == 0
+
+
+def test_decode_growth_cannot_starve_sibling_replica(cfg_params):
+    """Admission reserves a sequence's full lifetime footprint, so one
+    replica's decode growth stays inside its quota instead of draining the
+    shared pool out from under its sibling."""
+    cfg, params = cfg_params
+    pool = BlockPool(cfg, num_blocks=8, block_size=4)
+    a = ServingEngine(cfg, params, block_size=4, max_seqs=2, pool=pool,
+                      kv_quota=4, max_blocks_per_seq=4)
+    b = ServingEngine(cfg, params, block_size=4, max_seqs=2, pool=pool,
+                      kv_quota=4, max_blocks_per_seq=4)
+    rng = np.random.RandomState(6)
+    # lifetime footprint larger than the quota: rejected up front, not
+    # allowed to admit and then overflow mid-decode
+    with pytest.raises(ValueError, match="block capacity"):
+        a.submit(9, rng.randint(0, cfg.vocab_size, 4).astype(np.int32), 18)
+    # two quota-sized requests reserve the full 4 blocks each, so they run
+    # one at a time; b's share of the pool is never touched
+    a.submit(0, rng.randint(0, cfg.vocab_size, 4).astype(np.int32), 12)
+    a.submit(1, rng.randint(0, cfg.vocab_size, 4).astype(np.int32), 12)
+    b.submit(2, rng.randint(0, cfg.vocab_size, 8).astype(np.int32), 9)
+    done = {}
+    while (a.waiting or a.active) or (b.waiting or b.active):
+        for eng in (a, b):
+            for r in eng.step():
+                done[r.rid] = r.generated
+        assert a.cache.used_blocks <= 4 and b.cache.used_blocks <= 4
+    assert set(done) == {0, 1, 2}
+    assert pool.allocator.n_free == 8 and pool.reserved == 0
+
+
+def test_two_engines_share_one_pool_token_parity(cfg_params):
+    """Interleaved stepping of two engines over one pool must not corrupt
+    each other's pages: tokens match private-pool runs."""
+    cfg, params = cfg_params
+    rng = np.random.RandomState(3)
+    jobs = [(rng.randint(0, cfg.vocab_size, n).astype(np.int32), new)
+            for n, new in ((8, 6), (12, 5), (8, 7), (12, 4))]
+
+    def solo(job_ids):
+        eng = ServingEngine(cfg, params, num_blocks=64, block_size=8,
+                            max_seqs=2)
+        for i in job_ids:
+            eng.submit(i, *jobs[i])
+        return {r.rid: r.generated for r in eng.run_to_completion()}
+
+    expected = {**solo([0, 1]), **solo([2, 3])}
+
+    pool = BlockPool(cfg, num_blocks=64, block_size=8)
+    e1 = ServingEngine(cfg, params, block_size=8, max_seqs=2, pool=pool,
+                       kv_quota=32)
+    e2 = ServingEngine(cfg, params, block_size=8, max_seqs=2, pool=pool,
+                       kv_quota=32)
+    e1.submit(0, *jobs[0]); e1.submit(1, *jobs[1])
+    e2.submit(2, *jobs[2]); e2.submit(3, *jobs[3])
+    got = {}
+    while (e1.waiting or e1.active) or (e2.waiting or e2.active):
+        for eng in (e1, e2):
+            if eng.waiting or eng.active:
+                for r in eng.step():
+                    got[r.rid] = r.generated
+    assert got == expected
+    assert pool.allocator.n_free == 64
+
+
+# ---------------------------------------------------------------------------
+# Unified router interface.
+# ---------------------------------------------------------------------------
+
+
+def test_routers_share_one_interface():
+    routers = [FlowRouter([[1.0, 0.0], [0.0, 1.0]]),
+               RoundRobinRouter(2),
+               LeastLoadedRouter(2)]
+    up = np.array([True, True])
+    for r in routers:                  # no isinstance dispatch needed
+        r.update_loads([0.0, 1.0])
+        k = r.route(0, up)
+        assert k in (0, 1)
+        r.reconfigure([[0.5, 0.5], [0.5, 0.5], [0.0, 0.0]])
+        assert r.route(1, np.array([True, True, True])) in (0, 1, 2)
+
+
+def test_least_loaded_router_follows_injected_loads():
+    r = LeastLoadedRouter(3)
+    r.update_loads([0.9, 0.1, 0.5])
+    assert r.route(0) == 1
+    assert r.route(0, up=np.array([True, False, True])) == 2
+
+
+# ---------------------------------------------------------------------------
+# Health feedback: a straggler's traffic share shrinks over spans.
+# ---------------------------------------------------------------------------
+
+
+def test_straggler_share_shrinks_over_spans(cfg_params):
+    cfg, params = cfg_params
+    orch = _orchestrator(4)           # rates below keep DP=2 [(TP=2),(TP=2)]
+    rt = ClusterRuntime(cfg, params, orch, blocks_per_chip=16,
+                        seqs_per_chip=2, block_size=8)
+    rates = [5, 300, 2, 3]
+    rng = np.random.RandomState(4)
+    shares = []
+    for s in range(3):
+        plan = orch.plan_span(ws(rates))
+        rt.apply_plan(plan)
+        if s == 0:
+            assert len(plan.deployment.replicas) == 2
+            rt.set_throttle(1, 0.25)  # replica 1 serves 1/4 of the ticks
+        frac = np.array(plan.fractions)
+        load = frac @ np.asarray(rates, float)
+        shares.append(float(load[1] / load.sum()))
+        for i in range(6):
+            prompt = rng.randint(0, cfg.vocab_size, 8).astype(np.int32)
+            rt.submit(1000 * s + i, prompt, 5, type_id=1)
+        rt.run_until_idle()
+        report = rt.finish_span()
+        if s == 0:
+            assert report.achieved_fraction[1] < 0.6   # straggler detected
+            assert report.achieved_fraction[0] > 0.9
+    assert orch.health is not None and orch.health[1] < 0.6
+    # deployment was kept, but the plan routes away from the straggler
+    assert shares[2] < shares[0] - 0.1, shares
+
+
+def test_orchestrator_observed_rates_blend():
+    orch = _orchestrator(4)
+    orch.observe_rates([10.0, 2.0, 0.0, 0.0])
+    blended = orch.blended_workloads(ws([0, 0, 0, 0]), trust=0.5)
+    assert blended[0].rate == pytest.approx(5.0)
+    assert blended[1].rate == pytest.approx(1.0)
+    orch.observe_rates([10.0, 2.0, 0.0, 0.0])  # EWMA stays put
+    assert orch.observed_rates[0] == pytest.approx(10.0)
+    # pass-through when no observation matches
+    orch.observed_rates = None
+    same = orch.blended_workloads(ws([7, 0, 0, 0]))
+    assert same[0].rate == 7
+
+
+def test_simulator_driver_reports_health():
+    from repro.serving.baselines import OServePolicy
+    from repro.serving.request import synthesize_trace
+    from repro.serving.simulator import simulate
+    cm = CostModel(get_config("opt-30b").profile(), hw=H100_SPEC)
+    cluster = ClusterSpec(16, hw=H100_SPEC)
+    reqs = synthesize_trace(4, 120, trace_id=2, seed=0)
+    for r in reqs:
+        r.type_id = int(r.out_len > 500) * 2 + int(r.in_len > 600)
+    pol = OServePolicy(cm, cluster, ARCH)
+    simulate(reqs, pol, cm, ARCH, 4)
+    assert pol.orch.health is not None          # driver fed observe_health
+    assert len(pol.orch.health) == pol.orch.current.dp
+    assert np.all(pol.orch.health > 0)
+
+
+# ---------------------------------------------------------------------------
+# CI smoke: the orchestrator->runtime example path must keep working.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.real_smoke
+def test_example_serve_orchestrated_real_smoke():
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(repo, "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    out = subprocess.run(
+        [sys.executable, os.path.join(repo, "examples",
+                                      "serve_orchestrated.py"),
+         "--real", "--spans", "2", "--chips", "4",
+         "--requests-per-span", "4"],
+        env=env, capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "total completed 8/8" in out.stdout, out.stdout
