@@ -50,6 +50,8 @@ def run(model: str = "opt-30b", chips: int = 16, trace_id: int = 1,
             f"p99={m.get('p99', float('inf')):.1f}s"
             f";avg={m.get('avg_latency', float('inf')):.1f}s"
             f";thr={m['throughput_rps']:.2f}rps"
+            f";good={m['goodput_rps']:.2f}rps"
+            f";slo={m['slo_attainment']:.2f}"
             f";drop={m['dropped']};switch={res.switch_spans}")
         if spans_detail and name in ("oserve", "vllm-static"):
             picks = np.linspace(1, bench.n_spans - 1, 6).astype(int)  # P1-P6
@@ -61,8 +63,10 @@ def run(model: str = "opt-30b", chips: int = 16, trace_id: int = 1,
         o, v = base["oserve"], base["vllm-static"]
         gain_p99 = v.get("p99", 1) / max(o.get("p99", 1e-9), 1e-9)
         gain_thr = o["throughput_rps"] / max(v["throughput_rps"], 1e-9)
+        gain_good = o["goodput_rps"] / max(v["goodput_rps"], 1e-9)
         rows.append(f"e2e/{model}/{chips}c/t{trace_id}/gain,0,"
-                    f"p99_x={gain_p99:.2f};thr_x={gain_thr:.2f}")
+                    f"p99_x={gain_p99:.2f};thr_x={gain_thr:.2f}"
+                    f";good_x={gain_good:.2f}")
     return rows
 
 
@@ -82,6 +86,8 @@ def real_validation(model: str = "opt-30b", chips: int = 6,
             f"{o.seconds * 1e6:.0f},"
             f"dep={o.plan.deployment};share_l1={o.share_l1:.2f}"
             f";drained={o.switch.drained};migrated={o.switch.migrated}"
+            f";handoff={o.switch.handoff}"
+            f";recompute={o.switch.recompute_tokens}"
             f";completed={o.report.completed}")
     done = sum(1 for r in runtime.results.values() if r.done)
     rows.append(f"e2e-real/{model}/{chips}c/total,0,"

@@ -14,7 +14,7 @@ from repro.core.types import (H100_SPEC, TPU_V5E_SPEC, ClusterSpec,
 
 HW = {"h100": H100_SPEC, "tpu": TPU_V5E_SPEC}
 from repro.serving.baselines import calibrate_rate
-from repro.serving.request import synthesize_trace, span_of
+from repro.serving.request import apply_slo_budgets, synthesize_trace, span_of
 
 
 class Bench:
@@ -69,7 +69,7 @@ class Bench:
         rs = copy.deepcopy(self.requests)
         for r, l in zip(rs, self.labels):
             r.type_id = int(l)
-        return rs
+        return apply_slo_budgets(rs)
 
     def run(self, policy, queue_cap: float = 240.0):
         from repro.serving.simulator import simulate

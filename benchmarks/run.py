@@ -10,6 +10,7 @@ variants (all models/cluster sizes); default keeps CI-friendly settings.
   bench_ablation   Fig 14/AppD heterogeneous deployment + flow assignment
   bench_roofline   SRoofline  three-term roofline per (arch x shape)
   bench_engine     S4 engine  paged fused decode vs dense-gather decode
+  bench_switch     S4.2 KV    switch stall: page handoff vs copy vs re-prefill
 """
 from __future__ import annotations
 
@@ -18,7 +19,8 @@ import sys
 import time
 
 MODULES = ["bench_predictor", "bench_scheduler", "bench_ablation",
-           "bench_switching", "bench_e2e", "bench_roofline", "bench_engine"]
+           "bench_switching", "bench_e2e", "bench_roofline", "bench_engine",
+           "bench_switch"]
 
 
 def main() -> None:

@@ -85,7 +85,9 @@ def run_real(args) -> None:
             sw = "initial build"
         elif switch.changed:
             sw = (f"switch: rebuilt {switch.changed}, "
-                  f"drained {switch.drained}, migrated {switch.migrated}, "
+                  f"drained {switch.drained}, migrated {switch.migrated} "
+                  f"(handoff {switch.handoff}, copied {switch.copied}, "
+                  f"re-prefilled {switch.reprefilled}), "
                   f"requeued {switch.requeued}")
         else:
             sw = "no switch"

@@ -23,6 +23,13 @@ discrete-event simulator driver, not just by predictions):
   * ``observe_rates(rates)`` — realized per-type arrival counts; the EWMA
     is exposed via ``blended_workloads`` so drivers can correct (or replace)
     the predictor's forecast with what actually arrived.
+  * ``observe_inflight(context_lens, shared_pool)`` — context lengths the
+    next deployment switch would have to migrate.  ``plan_span`` prices the
+    KV migration (``switching.plan_kv_migration``) into the switch-cost
+    term: a runtime whose replicas share one ``BlockPool`` migrates by page
+    handoff (free), while a cross-pool cluster pays bytes-over-link — so
+    plans prefer handoff-friendly switches and demand a larger predicted
+    gain before a switch that would stall long in-flight contexts.
 """
 from __future__ import annotations
 
@@ -35,7 +42,7 @@ from repro.core.assignment import assign_workloads
 from repro.core.costmodel import CostModel
 from repro.core.deployment import flow_guided_search
 from repro.core.switching import (PlacedDeployment, place_deployment,
-                                  plan_switch)
+                                  plan_kv_migration, plan_switch)
 from repro.core.types import ClusterSpec, Deployment, WorkloadType
 
 
@@ -56,10 +63,11 @@ class SpanPlan:
     placed: PlacedDeployment
     fractions: list[list[float]]
     throughput: float
-    switch_seconds: float
+    switch_seconds: float       # param transfer + KV migration stall
     reload_seconds: float
     changed_replicas: list[int]
     search_time: float
+    kv_migration_seconds: float = 0.0   # the KV share of switch_seconds
 
 
 class Orchestrator:
@@ -72,6 +80,8 @@ class Orchestrator:
         self.placed: PlacedDeployment | None = None
         self.health: np.ndarray | None = None   # per-replica EWMA in (0, 1]
         self.observed_rates: np.ndarray | None = None  # per-type EWMA
+        self.inflight_lens: list[int] = []      # contexts a switch migrates
+        self.inflight_shared_pool: bool = True  # page handoff available?
 
     # -- observation (health / stragglers, realized rates) ---------------------
 
@@ -92,6 +102,27 @@ class Orchestrator:
         else:
             a = self.cfg.ewma_alpha
             self.observed_rates = (1 - a) * self.observed_rates + a * obs
+
+    def observe_inflight(self, context_lens: list[int],
+                         shared_pool: bool = True) -> None:
+        """Record what a deployment switch decided now would migrate.
+
+        ``context_lens``: current context (prompt + generated) of every
+        in-flight request; ``shared_pool``: replicas partition one device
+        pool, so migrations are page handoffs (zero bytes moved).
+        """
+        self.inflight_lens = [int(c) for c in context_lens]
+        self.inflight_shared_pool = bool(shared_pool)
+
+    def switch_kv_seconds(self, drain_threshold: int = 2048) -> float:
+        """KV-migration stall a switch would add, per the last observation."""
+        if not self.inflight_lens:
+            return 0.0
+        plan = plan_kv_migration(
+            self.cm, dict(enumerate(self.inflight_lens)),
+            drain_threshold=drain_threshold,
+            shared_pool=self.inflight_shared_pool)
+        return plan.estimate_seconds(self.cluster.hw)
 
     def blended_workloads(self, workloads: list[WorkloadType],
                           trust: float = 0.5) -> list[WorkloadType]:
@@ -122,6 +153,15 @@ class Orchestrator:
                 and len(self.health) == self.current.dp):
             scale = list(self.health)
 
+        # KV-migration stall the candidate switch would add (free when the
+        # runtime migrates by page handoff): switching must clear a bar
+        # raised by the stall's share of the span, so plans prefer
+        # handoff-friendly switches.
+        kv_s = 0.0
+        if (self.current is not None
+                and new_dep.replicas != self.current.replicas):
+            kv_s = self.switch_kv_seconds()
+
         result_scaled = False
         if self.current is not None and not force:
             cur_res = assign_workloads(self.cm, self.current, workloads,
@@ -134,16 +174,18 @@ class Orchestrator:
                                        balance=False).throughput
             cur_cap = assign_workloads(self.cm, self.current, stressed,
                                        balance=False).throughput
-            h = self.cfg.switch_hysteresis
+            h = self.cfg.switch_hysteresis + kv_s / self.cfg.span_seconds
             thr_gain = result.throughput > h * cur_res.throughput
             cap_gain = (result.throughput >= 0.999 * cur_res.throughput
                         and new_cap > h * cur_cap)
             lat_gain = (result.throughput >= 0.999 * cur_res.throughput
                         and new_cap >= 0.999 * cur_cap
+                        and kv_s <= 0.05 * self.cfg.span_seconds
                         and result.latency_proxy()
                         < 0.95 * cur_res.latency_proxy())
             if not (thr_gain or cap_gain or lat_gain):
                 new_dep, result = self.current, cur_res
+                kv_s = 0.0               # no switch -> nothing migrates
             result_scaled = result is cur_res
 
         # Health must reach the routed fractions even when the *search* wins
@@ -163,14 +205,15 @@ class Orchestrator:
         if (self.placed is not None and self.current is not None
                 and new_dep.replicas == self.current.replicas):
             changed = []
+            kv_s = 0.0
         elif self.placed is not None:
             plan = plan_switch(self.placed, new_placed, self.cm,
                                self.cluster.hw)
-            switch_s = plan.estimate_seconds(self.cluster.hw)
+            switch_s = plan.estimate_seconds(self.cluster.hw) + kv_s
         self.current, self.placed = new_dep, new_placed
         return SpanPlan(new_dep, new_placed, result.fractions,
                         result.throughput, switch_s, reload_s, changed,
-                        time.time() - t0)
+                        time.time() - t0, kv_migration_seconds=kv_s)
 
     # -- fault tolerance / elasticity (Appendix C) -------------------------------
 

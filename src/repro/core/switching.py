@@ -200,11 +200,17 @@ def plan_switch(
 class KVMigrationPlan:
     drained: list[int]          # request ids left to finish on the source
     migrated: list[tuple[int, float]]  # (request id, bytes moved)
+    handoff: list[int] = dataclasses.field(default_factory=list)
+    # destination-side pre-allocated KV buffers: page-rounded moved bytes
+    # inflated by the fragmentation headroom (paper: fixed-size buffers)
+    reserved_bytes: float = 0.0
 
     def moved_bytes(self) -> float:
         return sum(b for _, b in self.migrated)
 
     def estimate_seconds(self, hw: HardwareSpec, intra_pod: bool = True) -> float:
+        """Transfer stall: moved bytes over the fast (intra-pod ICI) or slow
+        (inter-pod DCN) link.  Page handoffs are accounting-only — free."""
         bw = hw.ici_bw if intra_pod else hw.dcn_bw
         return self.moved_bytes() / bw if self.moved_bytes() else 0.0
 
@@ -214,17 +220,36 @@ def plan_kv_migration(
     request_lens: dict[int, int],
     drain_threshold: int = 2048,
     headroom: float = 0.15,
+    *,
+    shared_pool: bool = False,
+    page_tokens: int = 16,
 ) -> KVMigrationPlan:
     """Short-sequence requests drain on the source; long ones migrate.
 
+    ``shared_pool=True`` models the runtime's page-handoff path (source and
+    destination replicas are views of one device ``BlockPool``): migrated
+    sequences transfer by ownership re-registration, moving zero bytes.
+    Otherwise bytes move page-granular — a sequence of context ``ctx``
+    occupies ``ceil(ctx / page_tokens)`` full pages, and the whole page
+    transfers, not just its live tokens.
+
     ``headroom`` reproduces the paper's pre-allocated fixed-size KV buffers
-    (+10-20% for fragmentation) — it inflates the reserved bytes, not the
-    moved bytes.
+    (+10-20% for fragmentation) — it inflates the destination's reserved
+    bytes, not the moved bytes.
     """
-    drained, migrated = [], []
+    drained: list[int] = []
+    migrated: list[tuple[int, float]] = []
+    handoff: list[int] = []
+    reserved = 0.0
     for rid, ctx in request_lens.items():
         if ctx < drain_threshold:
             drained.append(rid)
+            continue
+        pages = -(-ctx // page_tokens)
+        bytes_ = cm.p.seq_mem_bytes(pages * page_tokens)
+        reserved += bytes_ * (1.0 + headroom)
+        if shared_pool:
+            handoff.append(rid)
         else:
-            migrated.append((rid, cm.p.seq_mem_bytes(ctx) * (1.0 + 0.0)))
-    return KVMigrationPlan(drained, migrated)
+            migrated.append((rid, bytes_))
+    return KVMigrationPlan(drained, migrated, handoff, reserved)

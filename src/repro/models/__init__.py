@@ -9,4 +9,5 @@ from repro.models.model import (  # noqa: F401
     init_params,
     param_count,
     prefill,
+    prefill_chunk,
 )

@@ -233,6 +233,61 @@ def paged_decode_attention(x: jax.Array, p: dict, cfg: ModelConfig,
     return out @ p["wo"], k_pages, v_pages
 
 
+def prefill_chunk_attention(x: jax.Array, p: dict, cfg: ModelConfig,
+                            k_pages: jax.Array, v_pages: jax.Array,
+                            block_table: jax.Array, start: jax.Array,
+                            n_valid: jax.Array, trash_page: int,
+                            is_local: jax.Array | bool = False
+                            ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One prefill *chunk* attending the paged prefix + itself (chunked
+    prefill: the prefill->page scatter is fused into the forward).
+
+    Args:
+      x: [B, C, d_model] chunk embeddings (positions ``start + [0, C)``;
+        every sequence in the batch shares the same ``start``).
+      k_pages / v_pages: [P, Hkv, page, D] one layer's pool, kernel-native
+        layout; the chunk's K/V is scattered into its pages in place, then
+        attention reads the table's pages (prefix chunks included) — no
+        dense per-sequence cache is ever materialized outside the pool.
+      block_table: [B, n_pages] physical page ids covering start + C tokens.
+      start: scalar int32 — tokens already resident (earlier chunks).
+      n_valid: scalar int32 — real tokens in this chunk (the tail of a
+        bucketed chunk scatters to ``trash_page`` and is masked out).
+    Returns: (attn_out [B, C, d_model], new k_pages, new v_pages)
+    """
+    B, C = x.shape[0], x.shape[1]
+    pos = start + jnp.arange(C, dtype=jnp.int32)           # [C]
+    q, k_new, v_new = _project_qkv(x, p, cfg, pos[None, :])
+    page = k_pages.shape[2]
+    Hkv = k_pages.shape[1]
+    n_pages = block_table.shape[1]
+    dpad = k_pages.shape[-1] - cfg.head_dim
+    if dpad:
+        k_new = jnp.pad(k_new, ((0, 0),) * 3 + ((0, dpad),))
+        v_new = jnp.pad(v_new, ((0, 0),) * 3 + ((0, dpad),))
+    valid = jnp.arange(C) < n_valid                        # [C]
+    tidx = jnp.minimum(pos // page, n_pages - 1)           # [C]
+    pid = jnp.where(valid[None, :], block_table[:, tidx], trash_page)  # [B, C]
+    off = (pos % page)[None, :]                            # [1, C]
+    hidx = jnp.arange(Hkv)[None, None, :]
+    k_pages = k_pages.at[pid[:, :, None], hidx, off[:, :, None]].set(
+        k_new.astype(k_pages.dtype))
+    v_pages = v_pages.at[pid[:, :, None], hidx, off[:, :, None]].set(
+        v_new.astype(v_pages.dtype))
+
+    # gather prefix + chunk through the table (pages past the live length
+    # hold trash and are position-masked below)
+    k = k_pages[block_table]                  # [B, n, Hkv, page, D]
+    v = v_pages[block_table]
+    k = jnp.moveaxis(k, 3, 2).reshape(B, n_pages * page, Hkv, -1)
+    v = jnp.moveaxis(v, 3, 2).reshape(B, n_pages * page, Hkv, -1)
+    k = _expand_kv(k[..., :cfg.head_dim], cfg.n_q_heads).astype(q.dtype)
+    v = _expand_kv(v[..., :cfg.head_dim], cfg.n_q_heads).astype(q.dtype)
+    out = _attend(q, k, v, cfg, pos, jnp.arange(n_pages * page), is_local)
+    out = out.reshape(B, C, cfg.q_dim)
+    return out @ p["wo"], k_pages, v_pages
+
+
 def decode_attention(x: jax.Array, p: dict, cfg: ModelConfig,
                      k_cache: jax.Array, v_cache: jax.Array,
                      pos: jax.Array, is_local: jax.Array | bool = False

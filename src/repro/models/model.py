@@ -154,7 +154,11 @@ def _mixer(x, bp, cfg: ModelConfig, layer_idx, positions, mode,
     attn_out = None
     new_k = new_v = None
     if cfg.has_attn:
-        if mode == "decode" and paged is not None:
+        if mode == "chunk":
+            attn_out, new_k, new_v = attn_lib.prefill_chunk_attention(
+                x, bp["attn"], cfg, kv[0], kv[1], paged["table"], pos,
+                paged["n_valid"], paged["trash"], is_local)
+        elif mode == "decode" and paged is not None:
             attn_out, new_k, new_v = attn_lib.paged_decode_attention(
                 x, bp["attn"], cfg, kv[0], kv[1], paged["table"], pos,
                 is_local, impl=paged["impl"], interpret=paged["interpret"])
@@ -325,6 +329,54 @@ def prefill(params, cfg: ModelConfig, tokens=None, embeds=None):
         k=caches.get("k"), v=caches.get("v"),
         ssm=caches.get("ssm"), conv=caches.get("conv"), pos=pos)
     return logits, cache
+
+
+def prefill_chunk(params, cfg: ModelConfig, tokens, k, v, block_table,
+                  start, n_valid, trash_page: int):
+    """One *chunk* of a paged prefill: positions ``start + [0, C)``.
+
+    Chunked prefill (Sarathi-style) splits a long prompt into fixed-size
+    chunks interleaved with decode steps; each chunk's K/V is scattered into
+    the paged pool *inside* this forward (fused prefill->page scatter) and
+    its attention reads the earlier chunks back through the block table, so
+    no dense whole-prompt cache is ever materialized.
+
+    Args:
+      tokens: [B, C] int32; every sequence shares ``start``.  The chunk may
+        be bucketed: only the first ``n_valid`` positions are real — the
+        tail scatters to ``trash_page`` and is excluded from the logits.
+      k / v: [L, P, Hkv, page, D] pools (kernel-native layout).
+      block_table: [B, n_pages] page ids covering ``start + C`` tokens.
+      start: scalar int32 tokens already resident; n_valid: scalar int32.
+    Returns: (logits at position ``start + n_valid - 1`` [B, Vpad] fp32,
+      new k, new v).
+
+    SSM/hybrid architectures are not supported (the SSD scan has no
+    per-position state checkpoint to resume a bucketed chunk from); callers
+    fall back to one-shot prefill for them.
+    """
+    if cfg.has_ssm:
+        raise NotImplementedError(
+            "chunked prefill supports attention-only models")
+    B, C = tokens.shape
+    pos = start + jnp.arange(C, dtype=jnp.int32)
+    positions = jnp.broadcast_to(pos[None, :], (B, C))
+    x = embed_inputs(params, cfg, tokens, None, positions)
+    x = logical(x, "batch", "seq", "d_model")
+    paged = {"table": block_table, "n_valid": n_valid, "trash": trash_page}
+
+    def body(x, scanned):
+        bp, layer_idx, k_l, v_l = scanned
+        x, new_kv, _, _ = _block(x, bp, cfg, layer_idx, positions, "chunk",
+                                 kv=(k_l, v_l), pos=start, paged=paged)
+        return x, {"k": new_kv[0], "v": new_kv[1]}
+
+    x, ys = jax.lax.scan(
+        body, x, (params["blocks"], jnp.arange(cfg.n_layers), k, v),
+        unroll=cfg.scan_unroll)
+    x_last = jnp.take(x, n_valid - 1, axis=1)[:, None]   # [B, 1, d]
+    logits = lm_logits(params, cfg, x_last)[:, 0]
+    return logits, ys["k"], ys["v"]
 
 
 # --------------------------------------------------------------------------

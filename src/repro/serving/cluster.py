@@ -23,12 +23,22 @@ back to the orchestrator:
 At a span boundary, ``apply_plan`` executes the deployment switch for real
 instead of simulating its cost: replicas whose ``ReplicaConfig`` changed
 (per the plan) stop admitting, run a bounded **drain** window so short
-sequences finish in place, **export** the rest as host token snapshots
-(prompt + generated so far), release their pool blocks, and are rebuilt
-under the new configuration; exported requests are re-routed through the
-new assignment and **resume via re-prefill** on their target replica —
-token-for-token identical to an uninterrupted run under greedy decoding.
-Unchanged replicas keep serving throughout.
+sequences finish in place, **export** the rest as snapshots that keep
+ownership of their live KV pages, and are rebuilt under the new
+configuration; exported requests are re-routed through the new assignment
+(batched per destination replica) and restored through the migration
+subsystem (``repro.serving.migration``): because every replica is a view of
+the one shared ``BlockPool``, in-flight sequences migrate by **page
+handoff** — pure ownership re-registration, zero tokens recomputed, no data
+movement — with device page copy and re-prefill as progressively costlier
+fallbacks.  Every path is token-for-token identical to an uninterrupted run
+under greedy decoding.  Unchanged replicas keep serving throughout, and
+``total_prefill_tokens`` exposes the cluster-wide prefill-forward token
+count that the zero-recompute guarantee is asserted against.
+
+``finish_span`` additionally reports the in-flight context lengths to
+``Orchestrator.observe_inflight`` so the next ``plan_span`` can price the
+KV migration a prospective switch would trigger.
 
 ``set_throttle`` injects a straggler (a replica that only steps a fraction
 of the ticks) for chaos/regression testing of the health feedback loop.
@@ -46,6 +56,7 @@ from repro.serving.engine import (EngineRequest, InflightSnapshot,
                                   ServingEngine, head_pad_for,
                                   resolve_attn_impl)
 from repro.serving.kvcache import BlockPool
+from repro.serving.migration import MigrationReport, migrate_batch
 from repro.serving.router import FlowRouter, Router
 
 
@@ -69,6 +80,13 @@ class SwitchReport:
     drained: int                # requests that finished inside the drain window
     migrated: int               # in-flight requests resumed on a new replica
     requeued: int               # queued (never-admitted) requests re-routed
+    # restore-path split of `migrated` (see serving.migration)
+    handoff: int = 0            # same-pool page-ownership transfers (0 bytes)
+    copied: int = 0             # cross-pool device page copies
+    reprefilled: int = 0        # re-prefill fallback
+    pages_handoff: int = 0
+    pages_copied: int = 0
+    recompute_tokens: int = 0   # context tokens the fallback re-prefilled
 
     @property
     def moved(self) -> int:
@@ -90,17 +108,21 @@ class ClusterRuntime:
                  seqs_per_chip: int = 2, block_size: int = 16,
                  router: Router | None = None, drain_steps: int = 4,
                  decode_mode: str = "paged", attn_impl: str = "auto",
-                 dtype=jnp.float32, seed: int = 0):
+                 dtype=jnp.float32, seed: int = 0,
+                 prefill_chunk_tokens: int | None = None):
         """Args:
           cfg/params: the (one) model every replica serves — heterogeneity
             is in per-replica capacity, not weights.
           orch: optional ``core.orchestrator.Orchestrator``; when present,
-            ``finish_span`` feeds it health + realized rates.
+            ``finish_span`` feeds it health + realized rates + in-flight
+            context lengths (the migration-cost input for switch planning).
           total_chips: pool sizing when no orchestrator is attached.
           blocks_per_chip / seqs_per_chip: how a replica's chip count maps
             to its KV quota and concurrency.
           drain_steps: switch-time drain window (engine steps) before
             in-flight sequences are exported and migrated.
+          prefill_chunk_tokens: chunked-prefill size for every replica
+            (None = one-shot prefill; see ``ServingEngine``).
         """
         if total_chips is None:
             if orch is None:
@@ -114,6 +136,7 @@ class ClusterRuntime:
         self.seqs_per_chip = seqs_per_chip
         self.block_size = block_size
         self.drain_steps = drain_steps
+        self.prefill_chunk_tokens = prefill_chunk_tokens
         self.decode_mode = decode_mode
         self.attn_impl, _ = resolve_attn_impl(attn_impl)
         self.dtype = dtype
@@ -131,6 +154,9 @@ class ClusterRuntime:
         self._span_completed = 0
         self._span_type_counts = np.zeros(1)
         self.switch_reports: list[SwitchReport] = []
+        # prefill-forward tokens of replicas already torn down; together
+        # with the live engines' counters this is `total_prefill_tokens`
+        self._prefill_tokens_retired = 0
 
     # -- replica materialization ----------------------------------------------
 
@@ -150,7 +176,16 @@ class ClusterRuntime:
             self.cfg, self.params, block_size=self.block_size,
             max_seqs=max_seqs, dtype=self.dtype, greedy=True, seed=self.seed,
             decode_mode=self.decode_mode, attn_impl=self.attn_impl,
-            pool=self.pool, kv_quota=quota, max_blocks_per_seq=max_bps)
+            pool=self.pool, kv_quota=quota, max_blocks_per_seq=max_bps,
+            prefill_chunk_tokens=self.prefill_chunk_tokens)
+
+    @property
+    def total_prefill_tokens(self) -> int:
+        """Tokens that went through a prefill forward anywhere in the
+        cluster's lifetime.  A switch whose migrations all ride the page-
+        handoff path leaves this unchanged — asserted in tests."""
+        return (self._prefill_tokens_retired
+                + sum(h.engine.prefill_tokens for h in self.replicas))
 
     # -- span plan execution ----------------------------------------------------
 
@@ -201,8 +236,10 @@ class ClusterRuntime:
             for r in h.engine.drain(self.drain_steps):
                 self._record_finish(r)
                 drained += 1
-            # 2) snapshot what's left and release the replica's pool blocks
-            migrate.extend(h.engine.export_inflight())
+            # 2) snapshot what's left *keeping the pages*: the sequences'
+            #    KV stays resident in the shared pool across the rebuild
+            migrate.extend(h.engine.export_inflight(release=False))
+            self._prefill_tokens_retired += h.engine.prefill_tokens
             h.engine.release_all()
 
         # 3) rebuild changed replicas under the new configuration
@@ -213,11 +250,13 @@ class ClusterRuntime:
         ]
         self.router.reconfigure(plan.fractions)
 
-        # 4) re-route exported requests through the new assignment; in-flight
-        #    ones resume via re-prefill on their new replica.  Routing is
-        #    capacity-masked: a snapshot only goes to a replica whose context
-        #    ceiling can hold it (heterogeneous replicas differ here).
-        migrated = requeued = 0
+        # 4) re-route exported requests through the new assignment, batched
+        #    per destination replica, and restore them via the migration
+        #    subsystem: same-pool page handoff first (zero recompute), then
+        #    device copy, then re-prefill.  Routing is capacity-masked: a
+        #    snapshot only goes to a replica whose context ceiling can hold
+        #    it (heterogeneous replicas differ here).
+        by_dest: dict[int, list[InflightSnapshot]] = {}
         for snap in migrate:
             ctx = len(snap.prompt) + len(snap.generated)
             remaining = snap.max_new_tokens - len(snap.generated)
@@ -225,13 +264,17 @@ class ClusterRuntime:
             if k < 0:   # unreachable: the pre-check above already validated
                 raise RuntimeError(
                     f"request {snap.rid} unplaceable despite pre-check")
-            self.replicas[k].engine.import_inflight([snap])
+            by_dest.setdefault(k, []).append(snap)
             self.rid_owner[snap.rid] = k
-            if snap.generated:
-                migrated += 1
-            else:
-                requeued += 1
-        report = SwitchReport(changed, drained, migrated, requeued)
+        mig = MigrationReport()
+        for k, group in sorted(by_dest.items()):
+            mig.merge(migrate_batch(self.replicas[k].engine, group))
+        report = SwitchReport(
+            changed, drained, mig.migrated, mig.requeued,
+            handoff=mig.handoff, copied=mig.copied,
+            reprefilled=mig.reprefilled, pages_handoff=mig.pages_handoff,
+            pages_copied=mig.pages_copied,
+            recompute_tokens=mig.recompute_tokens)
         self.switch_reports.append(report)
         return report
 
@@ -329,6 +372,11 @@ class ClusterRuntime:
         if self.orch is not None:
             self.orch.observe_health(achieved)
             self.orch.observe_rates(self._span_type_counts)
+            # what a switch decided *now* would have to migrate; replicas
+            # share one pool, so migrations ride the free page-handoff path
+            lens = [c for h in self.replicas
+                    for c in h.engine.inflight_context_lens()]
+            self.orch.observe_inflight(lens, shared_pool=True)
         for h in self.replicas:
             h.slot_ticks = 0
             h.emitted_span = 0

@@ -26,16 +26,32 @@ execute orchestrator deployment switches on live engines):
     in-flight sequences keep decoding.
   * ``drain(max_steps)`` — run admission-free steps until the active set
     empties (or the budget runs out), finishing short sequences in place.
-  * ``export_inflight()`` — snapshot every in-flight and queued request as
-    host-side token state (original prompt + tokens generated so far) and
-    release their KV blocks back to the pool.  Token state is the whole
-    snapshot: KV pages and SSM state are *recomputed* on the target replica.
-  * ``import_inflight(snaps)`` — resume migrated requests by re-prefilling
-    ``prompt + generated`` as one context; under greedy decoding the next
-    token equals what an uninterrupted engine would have produced, so a
-    drain/rebuild/restore cycle is token-for-token transparent.
+  * ``export_inflight(release=...)`` — snapshot every in-flight and queued
+    request.  With ``release=True`` the snapshot is host token state only
+    (prompt + generated) and the KV blocks return to the pool; with
+    ``release=False`` the snapshot additionally *keeps ownership of the
+    live KV pages* (plus SSM state rows), so a destination replica can
+    resume the sequence without recomputing anything — see
+    ``repro.serving.migration``.
+  * ``import_by_pages(snaps)`` — adopt migrated sequences directly from
+    their KV pages: a same-pool migration re-registers page ownership
+    (zero tokens recomputed, no data movement); a cross-pool one runs the
+    jitted page copy / relayout.  Returns the snapshots it could not place.
+  * ``import_inflight(snaps)`` — the re-prefill fallback: resume migrated
+    requests by re-prefilling ``prompt + generated`` as one context; under
+    greedy decoding the next token equals what an uninterrupted engine
+    would have produced, so either restore path is token-for-token
+    transparent.
   * ``load_stats()`` — queue depth / occupancy / block headroom for routers
     and the cluster health loop.
+
+Chunked prefill (``prefill_chunk_tokens=``): prompts longer than the chunk
+size run through ``models.prefill_chunk`` one fixed-size chunk per engine
+step, with the prefill->page scatter fused into the chunk forward, so a
+long prompt (or a migrated context re-prefilling after a cross-pool switch)
+never stalls the replica's decode batch.  ``prefill_tokens`` counts every
+token that went through a prefill forward — the zero-recompute guarantee of
+page-handoff migration is asserted against it in tests.
 
 Engines can share one device ``BlockPool`` (``pool=`` + ``kv_quota=``): the
 cluster partitions a single allocation across heterogeneous replicas
@@ -50,10 +66,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import (DecodeCache, PagedDecodeState, decode_step,
-                          decode_step_paged, prefill)
+                          decode_step_paged, prefill, prefill_chunk)
 from repro.models.config import ModelConfig
 from repro.models.sampling import sample
-from repro.serving.kvcache import BlockPool, PagedKVCache
+from repro.serving.kvcache import (BlockPool, PagedKVCache, copy_blocks,
+                                   relayout_blocks)
 
 
 def resolve_attn_impl(attn_impl: str) -> tuple[str, bool]:
@@ -79,19 +96,45 @@ class EngineRequest:
     done: bool = False
     # resumed (migrated) requests prefill prompt+generated as one context
     ctx: np.ndarray | None = None
+    # chunked prefill: tokens of ``prefill_tokens`` already in pages
+    prefill_pos: int = 0
 
     @property
     def prefill_tokens(self) -> np.ndarray:
         return self.ctx if self.ctx is not None else self.prompt
 
+    @property
+    def prefilling(self) -> bool:
+        """The context is not fully in pages yet: excluded from decode
+        batches, advanced chunk by chunk.  (Resumed requests re-prefilling
+        ``prompt + generated`` are prefilling despite non-empty
+        ``generated``; page-adopted ones start with ``prefill_pos`` at the
+        end.)"""
+        return self.prefill_pos < len(self.prefill_tokens)
+
 
 @dataclasses.dataclass
 class InflightSnapshot:
-    """Host token state of one request, sufficient to resume it anywhere."""
+    """State of one request, sufficient to resume it anywhere.
+
+    The token fields alone (``release=True`` exports) support the re-prefill
+    restore path.  A ``release=False`` export additionally carries the live
+    KV state — the physical pages (whose allocator refcounts the snapshot
+    now owns), the resident length, and the SSM state rows — enabling
+    zero-recompute restores via ``import_by_pages``.  Held pages must end in
+    exactly one of: adoption by a destination engine, or
+    ``migration.release_snapshot_pages``.
+    """
     rid: int
     prompt: np.ndarray
     generated: list
     max_new_tokens: int
+    # live KV state (page-handoff exports only)
+    blocks: list | None = None       # physical page ids, sequence order
+    seq_len: int = 0                 # tokens resident in those pages
+    pool: "BlockPool | None" = None  # the pool the pages live in
+    ssm: jax.Array | None = None     # [L, ...] this sequence's SSM state row
+    conv: jax.Array | None = None
 
 
 def _pow2_bucket(n: int, cap: int) -> int:
@@ -105,7 +148,8 @@ class ServingEngine:
                  dtype=jnp.float32, greedy: bool = True, seed: int = 0,
                  decode_mode: str = "paged", attn_impl: str = "auto",
                  pool: BlockPool | None = None, kv_quota: int | None = None,
-                 max_blocks_per_seq: int | None = None):
+                 max_blocks_per_seq: int | None = None,
+                 prefill_chunk_tokens: int | None = None):
         self.cfg = cfg
         self.params = params
         if decode_mode not in ("paged", "dense"):
@@ -143,12 +187,26 @@ class ServingEngine:
         self.admitting = True
         self.steps = 0
         self.tokens_out = 0
+        # tokens that went through a prefill forward (one-shot or chunked);
+        # page-handoff migration adds ZERO here — tests assert on it
+        self.prefill_tokens = 0
+        # chunked prefill needs per-position resumable state; the SSD scan
+        # has none, so SSM/hybrid archs keep the one-shot path
+        if prefill_chunk_tokens is not None and cfg.has_ssm:
+            prefill_chunk_tokens = None
+        self.prefill_chunk_tokens = prefill_chunk_tokens
 
         self._prefill = jax.jit(
             lambda p, toks: prefill(p, cfg, tokens=toks))
         self._decode = jax.jit(
             lambda p, toks, cache: decode_step(p, cfg, toks, cache))
         self._fused = self._build_fused()
+        trash = self.cache.num_blocks
+        donate = (2, 3) if jax.default_backend() != "cpu" else ()
+        self._chunk = jax.jit(
+            lambda p, t, k, v, tab, s, nv: prefill_chunk(
+                p, cfg, t, k, v, tab, s, nv, trash),
+            donate_argnums=donate)
 
     def _build_fused(self):
         """The jitted device-resident decode step.
@@ -253,26 +311,116 @@ class ServingEngine:
             steps += 1
         return finished
 
-    def export_inflight(self) -> list[InflightSnapshot]:
+    def export_inflight(self, release: bool = True) -> list[InflightSnapshot]:
         """Snapshot and evict every in-flight + queued request.
 
-        Returns host token state only — prompt and generated tokens — and
-        releases the KV blocks.  The target replica resumes each request by
-        re-prefilling ``prompt + generated`` (see ``import_inflight``).
+        ``release=True``: host token state only — prompt and generated
+        tokens — KV blocks return to the pool and the target replica
+        re-prefills ``prompt + generated`` (see ``import_inflight``).
+
+        ``release=False`` (page handoff): snapshots of sequences that hold a
+        useful KV prefix (fully prefilled, mid-generation) keep ownership of
+        their physical pages and SSM state rows so a destination can adopt
+        them via ``import_by_pages`` with zero recompute.  The caller is
+        responsible for every held page (adopt or
+        ``migration.release_snapshot_pages``).
         """
         snaps: list[InflightSnapshot] = []
         for slot in sorted(self.active):
             r = self.active.pop(slot)
-            self.cache.release_slot(slot)
-            snaps.append(InflightSnapshot(r.rid, r.prompt,
-                                          list(r.generated),
-                                          r.max_new_tokens))
+            if release or r.prefilling:
+                # mid-chunk prefixes are not resumable state: drop the pages
+                self.cache.release_slot(slot)
+                snaps.append(InflightSnapshot(r.rid, r.prompt,
+                                              list(r.generated),
+                                              r.max_new_tokens))
+                continue
+            ssm_row = (self.cache.ssm[:, slot]
+                       if self.cache.ssm is not None else None)
+            conv_row = (self.cache.conv[:, slot]
+                        if self.cache.conv is not None else None)
+            blocks, seq_len = self.cache.disown_slot(slot)
+            snaps.append(InflightSnapshot(
+                r.rid, r.prompt, list(r.generated), r.max_new_tokens,
+                blocks=blocks, seq_len=seq_len, pool=self.cache.pool,
+                ssm=ssm_row, conv=conv_row))
         for r in self.waiting:
             snaps.append(InflightSnapshot(r.rid, r.prompt,
                                           list(r.generated),
                                           r.max_new_tokens))
         self.waiting = []
         return snaps
+
+    def import_by_pages(self, snaps: list[InflightSnapshot]
+                        ) -> list[InflightSnapshot]:
+        """Adopt migrated sequences directly from their live KV pages.
+
+        Same-pool snapshots transfer by re-registering block ownership (no
+        data movement, zero tokens recomputed); cross-pool ones run the
+        jitted page copy (or the dense relayout when page geometry differs)
+        and release the source pages.  Adopted requests join ``active``
+        mid-generation — the next ``step`` decodes them.
+
+        Returns the snapshots that could NOT be adopted (no free slot /
+        quota / no pages); callers fall back to ``import_inflight``, which
+        still owns releasing those snapshots' pages.
+        """
+        rejected: list[InflightSnapshot] = []
+        for s in snaps:
+            if s.blocks is None or s.pool is None or not s.generated:
+                rejected.append(s)
+                continue
+            ctx = len(s.prompt) + len(s.generated)
+            remaining = s.max_new_tokens - len(s.generated)
+            if remaining < 1:
+                raise ValueError(f"request {s.rid}: nothing left to generate")
+            free = self._free_slots()
+            # lifetime positions: resident prefix + tokens still to cache
+            total = ctx + remaining - 1
+            if not free or not self.fits(ctx, remaining):
+                rejected.append(s)
+                continue
+            same_pool = s.pool is self.cache.pool
+            if same_pool:
+                if (s.pool.block_size != self.cache.block_size
+                        or not self.cache.can_adopt(len(s.blocks), total)):
+                    rejected.append(s)
+                    continue
+                slot = free[0]
+                self.cache.adopt_slot(slot, s.blocks, s.seq_len,
+                                      total_tokens=total)
+            else:
+                if not self.cache.can_admit(s.seq_len, total_tokens=total):
+                    rejected.append(s)
+                    continue
+                slot = free[0]
+                self.cache.admit(slot, s.seq_len, total_tokens=total)
+                dst_blocks = self.cache.seq_blocks[slot]
+                if s.pool.k is None:
+                    pass      # attn-free arch: state is the SSM rows below
+                elif (s.pool.block_size == self.cache.block_size
+                        and s.pool.k.shape[2:] == self.cache.k.shape[2:]):
+                    copy_blocks(s.pool, self.cache.pool, s.blocks, dst_blocks)
+                else:
+                    relayout_blocks(s.pool, self.cache.pool, s.blocks,
+                                    dst_blocks, s.seq_len)
+                s.pool.allocator.release(s.blocks)
+            if s.ssm is not None:
+                self.cache.ssm = self.cache.ssm.at[:, slot].set(s.ssm)
+            if s.conv is not None:
+                self.cache.conv = self.cache.conv.at[:, slot].set(s.conv)
+            r = EngineRequest(s.rid, np.asarray(s.prompt, np.int32),
+                              s.max_new_tokens, slot=slot,
+                              generated=list(s.generated))
+            r.prefill_pos = len(r.prefill_tokens)   # prefix already in pages
+            self.active[slot] = r
+            # this engine owns the pages now: neuter the snapshot so a later
+            # release cannot double-free them
+            s.blocks = None
+            s.pool = None
+            s.ssm = None
+            s.conv = None
+        return rejected
 
     def import_inflight(self, snaps: list[InflightSnapshot]) -> None:
         """Resume migrated requests (re-prefill of prompt + generated).
@@ -310,8 +458,19 @@ class ServingEngine:
             "free_blocks": self.cache.n_free_blocks,
             "tokens_out": self.tokens_out,
             "steps": self.steps,
+            "prefill_tokens": self.prefill_tokens,
             "load": (len(self.waiting) + len(self.active)) / self.max_seqs,
         }
+
+    def inflight_context_lens(self) -> list[int]:
+        """Context length of every sequence that holds live KV pages (the
+        orchestrator's migration-cost input for the next switch decision).
+
+        Queued and mid-prefill requests are excluded: they migrate by free
+        requeue, not by moving KV state, so pricing them as byte transfers
+        would wrongly inflate the switch-cost term."""
+        return [len(r.prompt) + len(r.generated)
+                for r in self.active.values() if not r.prefilling]
 
     # -- scheduling ------------------------------------------------------------
 
@@ -346,6 +505,7 @@ class ServingEngine:
             toks = np.stack([r.prefill_tokens for r in group])
             logits, cache = self._prefill(self.params, jnp.asarray(toks))
             first = self._pick(logits)           # one sync per prefill group
+            self.prefill_tokens += pl * len(group)
             for i, r in enumerate(group):
                 if self.cfg.has_attn:
                     self.cache.write_prefill(r.slot, cache.k[:, i],
@@ -355,8 +515,44 @@ class ServingEngine:
                         cache.ssm[:, i])
                     self.cache.conv = self.cache.conv.at[:, r.slot].set(
                         cache.conv[:, i])
+                r.prefill_pos = pl
                 r.generated.append(int(first[i]))
                 self.tokens_out += 1
+
+    def _advance_chunked(self) -> None:
+        """Run one prefill chunk for the oldest mid-prefill sequence.
+
+        One bounded chunk per engine step (Sarathi-style): the prefill->page
+        scatter is fused into the chunk forward, and the decode batch for
+        already-running sequences proceeds in the same step, so a long
+        prompt never stalls decoding.
+        """
+        slots = sorted(s for s, r in self.active.items() if r.prefilling)
+        if not slots:
+            return
+        slot = slots[0]
+        r = self.active[slot]
+        toks_all = r.prefill_tokens
+        start = r.prefill_pos
+        C = self.prefill_chunk_tokens
+        n_valid = min(C, len(toks_all) - start)
+        cb = _pow2_bucket(n_valid, C)
+        buf = np.zeros((1, cb), np.int32)
+        buf[0, :n_valid] = toks_all[start:start + n_valid]
+        bs = self.cache.block_size
+        need = (start + n_valid + bs - 1) // bs
+        n_pages = _pow2_bucket(need, self.cache.max_blocks_per_seq)
+        table = self.cache.block_table_dev[slot:slot + 1, :n_pages]
+        logits, k, v = self._chunk(self.params, jnp.asarray(buf),
+                                   self.cache.k, self.cache.v, table,
+                                   jnp.int32(start), jnp.int32(n_valid))
+        self.cache.k, self.cache.v = k, v
+        self.prefill_tokens += n_valid
+        r.prefill_pos = start + n_valid
+        if r.prefill_pos >= len(toks_all):     # final chunk emits token 1
+            first = self._pick(logits)
+            r.generated.append(int(first[0]))
+            self.tokens_out += 1
 
     def _pick(self, logits: jax.Array) -> np.ndarray:
         if self.greedy:
@@ -451,12 +647,20 @@ class ServingEngine:
         Prefill and decode interleave: sequences that were already active
         still emit their decode token on a step that admits new prompts
         (newly admitted requests get their first token from prefill itself).
+        Prompts longer than ``prefill_chunk_tokens`` advance one fused
+        chunk per step instead of one-shot prefilling, so the decode batch
+        keeps emitting while a long context streams into its pages.
         """
         self.steps += 1
-        decode_slots = list(self.active)
+        decode_slots = [s for s, r in self.active.items() if not r.prefilling]
         admitted = self._admit()
-        if admitted:
-            self._run_prefill(admitted)
+        chunk = self.prefill_chunk_tokens
+        oneshot = [r for r in admitted
+                   if chunk is None or len(r.prefill_tokens) <= chunk]
+        if oneshot:
+            self._run_prefill(oneshot)
+        if chunk is not None:
+            self._advance_chunked()      # longer admissions, chunk by chunk
         if decode_slots:
             if self.decode_mode == "paged":
                 self._run_decode(decode_slots)

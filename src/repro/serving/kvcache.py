@@ -29,6 +29,15 @@ max_blocks_per_seq]`` and ``seq_lens_dev [max_seqs + 1]`` are synced
 never re-uploaded wholesale per step.  Row ``max_seqs`` is the trash slot
 (points at the trash page) used to pad decode batches to bucket sizes.
 
+Migration primitives (``repro.serving.migration`` builds on these):
+``disown_slot`` removes a sequence from a view's accounting *without*
+returning its blocks to the allocator, so a sibling view over the same pool
+can ``adopt_slot`` them — a deployment switch then moves a sequence's KV by
+re-registering page ownership instead of copying (zero tokens recomputed).
+``copy_blocks`` is the jitted pool-to-pool page gather/scatter for
+migrations that cross pools; ``gather_tokens`` + ``scatter_tokens`` re-
+layout a sequence between pools whose page geometry differs.
+
 ``gather_dense`` survives only for the legacy dense-gather decode path and
 parity tests; the serving decode path consumes pages directly.
 """
@@ -288,6 +297,63 @@ class PagedKVCache:
         for slot in list(self.seq_blocks):
             self.release_slot(slot)
 
+    # -- ownership transfer (page handoff between views) -----------------------
+
+    def disown_slot(self, slot: int) -> tuple[list[int], int]:
+        """Remove a sequence from this view's accounting *without* releasing
+        its blocks to the allocator.
+
+        Returns ``(blocks, seq_len)``.  The caller now owns the pages (the
+        allocator still counts them allocated); they must end in either
+        ``adopt_slot`` on a sibling view of the same pool or
+        ``release_orphan_blocks``, or the pool leaks.
+        """
+        blocks = self.seq_blocks.pop(slot)
+        seq_len = int(self.seq_lens[slot])
+        self.used_blocks -= len(blocks)
+        reserve = self.seq_reserved.pop(slot, len(blocks))
+        self.reserved_blocks -= reserve
+        self.pool.reserved -= reserve
+        self.seq_lens[slot] = 0
+        self.block_table[slot, :] = 0
+        self.block_table_dev = self.block_table_dev.at[slot].set(
+            self.num_blocks)
+        self.seq_lens_dev = self.seq_lens_dev.at[slot].set(0)
+        return blocks, seq_len
+
+    def can_adopt(self, n_blocks: int, total_tokens: int) -> bool:
+        return self.n_free_blocks >= max(n_blocks, self._blocks(total_tokens))
+
+    def adopt_slot(self, slot: int, blocks: list[int], seq_len: int,
+                   total_tokens: int | None = None) -> None:
+        """Adopt already-allocated pool blocks into a slot of this view.
+
+        The inverse of ``disown_slot``: block data stays where it is; only
+        ownership accounting and the (host + device) block table move.  The
+        blocks must belong to this view's pool.
+        """
+        n = len(blocks)
+        if n > self.max_blocks_per_seq:
+            raise MemoryError("adopted sequence exceeds max_blocks_per_seq")
+        reserve = max(n, self._blocks(total_tokens or seq_len))
+        if not self.can_adopt(n, total_tokens or seq_len):
+            raise MemoryError(
+                f"cannot adopt {n} blocks (reserve {reserve}): view has "
+                f"{self.n_free_blocks} free")
+        self.used_blocks += n
+        self.reserved_blocks += reserve
+        self.pool.reserved += reserve
+        self.seq_reserved[slot] = reserve
+        self.seq_blocks[slot] = list(blocks)
+        self.block_table[slot, :] = 0
+        self.block_table[slot, :n] = blocks
+        self.seq_lens[slot] = seq_len
+        row = np.full(self.max_blocks_per_seq, self.num_blocks, np.int32)
+        row[:n] = blocks
+        self.block_table_dev = self.block_table_dev.at[slot].set(
+            jnp.asarray(row))
+        self.seq_lens_dev = self.seq_lens_dev.at[slot].set(seq_len)
+
     # -- device views ----------------------------------------------------------
 
     def write_prefill(self, slot: int, k_seq: jax.Array, v_seq: jax.Array
@@ -346,3 +412,88 @@ class PagedKVCache:
         k, v = k[..., :D], v[..., :D]   # drop kernel head_pad columns
         lens = jnp.asarray(self.seq_lens[slots])
         return k, v, lens
+
+
+# --------------------------------------------------------------------------
+# Pool-to-pool page movement (cross-pool KV migration).
+# --------------------------------------------------------------------------
+
+
+@jax.jit
+def _copy_blocks_dev(src_k, src_v, dst_k, dst_v, src_idx, dst_idx):
+    dst_k = dst_k.at[:, dst_idx].set(src_k[:, src_idx])
+    dst_v = dst_v.at[:, dst_idx].set(src_v[:, src_idx])
+    return dst_k, dst_v
+
+
+def copy_blocks(src: BlockPool, dst: BlockPool,
+                src_blocks: list[int], dst_blocks: list[int]) -> None:
+    """Jitted page gather/scatter between two pools of the same geometry.
+
+    The index vectors are padded to a power-of-two length against each
+    pool's trash page, so the number of distinct compilations is
+    O(log max_blocks), not one per migrated sequence size.
+    """
+    if (src.block_size != dst.block_size
+            or src.k.shape[2:] != dst.k.shape[2:]):
+        raise ValueError("copy_blocks needs matching page geometry; use "
+                         "relayout_blocks")
+    n = len(src_blocks)
+    if n != len(dst_blocks):
+        raise ValueError("src/dst block lists differ in length")
+    if n == 0:
+        return
+    cap = 1 << max(0, n - 1).bit_length()
+    src_idx = np.full(cap, src.trash_page, np.int32)
+    dst_idx = np.full(cap, dst.trash_page, np.int32)
+    src_idx[:n] = src_blocks
+    dst_idx[:n] = dst_blocks
+    dst.k, dst.v = _copy_blocks_dev(src.k, src.v, dst.k, dst.v,
+                                    jnp.asarray(src_idx), jnp.asarray(dst_idx))
+
+
+def gather_tokens(pool: BlockPool, blocks: list[int], seq_len: int
+                  ) -> tuple[jax.Array, jax.Array]:
+    """Materialize one sequence's K/V as dense [L, S, Hkv, D] (head_pad
+    columns dropped) — the relayout path between mismatched geometries."""
+    idx = jnp.asarray(blocks, jnp.int32)
+    k = pool.k[:, idx]                       # [L, n, Hkv, bs, D]
+    v = pool.v[:, idx]
+    L, n, H, bs, D = k.shape
+    k = jnp.swapaxes(k, 2, 3).reshape(L, n * bs, H, D)[:, :seq_len]
+    v = jnp.swapaxes(v, 2, 3).reshape(L, n * bs, H, D)[:, :seq_len]
+    d = pool.cfg.head_dim
+    return k[..., :d], v[..., :d]
+
+
+def scatter_tokens(pool: BlockPool, blocks: list[int],
+                   k_seq: jax.Array, v_seq: jax.Array) -> None:
+    """Scatter dense [L, S, Hkv, D] K/V into the given pool pages
+    (re-chunking to this pool's page size; pads head_dim to its head_pad)."""
+    S = k_seq.shape[1]
+    bs = pool.block_size
+    n = (S + bs - 1) // bs
+    if n != len(blocks):
+        raise ValueError(f"{S} tokens need {n} blocks, got {len(blocks)}")
+    pad = n * bs - S
+    dpad = pool.k.shape[-1] - k_seq.shape[-1]
+    if pad or dpad:
+        k_seq = jnp.pad(k_seq, ((0, 0), (0, pad), (0, 0), (0, dpad)))
+        v_seq = jnp.pad(v_seq, ((0, 0), (0, pad), (0, 0), (0, dpad)))
+    kb = jnp.swapaxes(k_seq.reshape(k_seq.shape[0], n, bs, *k_seq.shape[2:]),
+                      2, 3)
+    vb = jnp.swapaxes(v_seq.reshape(v_seq.shape[0], n, bs, *v_seq.shape[2:]),
+                      2, 3)
+    idx = jnp.asarray(blocks, jnp.int32)
+    pool.k = pool.k.at[:, idx].set(kb.astype(pool.k.dtype))
+    pool.v = pool.v.at[:, idx].set(vb.astype(pool.v.dtype))
+
+
+def relayout_blocks(src: BlockPool, dst: BlockPool,
+                    src_blocks: list[int], dst_blocks: list[int],
+                    seq_len: int) -> None:
+    """Move one sequence between pools whose page geometry differs
+    (block_size and/or kernel head_pad): dense gather then re-chunked
+    scatter, entirely on device."""
+    k, v = gather_tokens(src, src_blocks, seq_len)
+    scatter_tokens(dst, dst_blocks, k, v)

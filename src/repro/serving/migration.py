@@ -1,0 +1,110 @@
+"""KV migration subsystem: zero-recompute deployment switches (paper S4.2).
+
+When a deployment switch tears a replica down, its in-flight sequences used
+to resume by *re-prefilling* ``prompt + generated`` on the destination — a
+stall that grows with context length, exactly what the paper's migration
+design avoids.  This module routes every migrated sequence through the
+cheapest restore path available, in order:
+
+  1. **Page handoff** (same ``BlockPool``): the sequence's KV pages do not
+     move at all — block ownership re-registers from the source replica's
+     cache view to the destination's (allocator accounting + one block-table
+     row scatter), and the destination resumes decoding with ZERO tokens
+     recomputed.  Because ``ClusterRuntime`` partitions one shared device
+     pool across all replicas, this is the common case for every in-cluster
+     switch.
+  2. **Device page copy / relayout** (different pools): a jitted
+     gather/scatter moves the pages between pools (``kvcache.copy_blocks``),
+     falling back to a dense gather + re-chunked scatter when the page
+     geometry differs (``kvcache.relayout_blocks``).  Still zero tokens
+     recomputed — only bytes move.
+  3. **Re-prefill** (no pages, or the destination cannot hold them): the
+     token-state fallback inherited from the previous design; with chunked
+     prefill enabled on the destination engine the recompute interleaves
+     with its decode batch instead of stalling it.
+
+All three paths are token-for-token identical to an uninterrupted run under
+greedy decoding; they differ only in stall and bytes moved — measured in
+``benchmarks/bench_switch.py`` and costed analytically by
+``core.switching.plan_kv_migration``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.serving.engine import InflightSnapshot, ServingEngine
+
+
+@dataclasses.dataclass
+class MigrationReport:
+    """What one migration batch did, by restore path."""
+    handoff: int = 0            # same-pool ownership transfers (0 bytes)
+    copied: int = 0             # cross-pool device page copies
+    reprefilled: int = 0        # re-prefill fallback (tokens recomputed)
+    requeued: int = 0           # never-admitted requests, plain re-submit
+    pages_handoff: int = 0      # pages transferred by accounting only
+    pages_copied: int = 0       # pages physically moved between pools
+    recompute_tokens: int = 0   # context tokens the fallback re-prefills
+
+    @property
+    def migrated(self) -> int:
+        """In-flight (mid-generation) sequences moved, any path."""
+        return self.handoff + self.copied + self.reprefilled
+
+    def merge(self, other: "MigrationReport") -> None:
+        for f in dataclasses.fields(self):
+            setattr(self, f.name, getattr(self, f.name) + getattr(other, f.name))
+
+
+def release_snapshot_pages(snap: InflightSnapshot) -> None:
+    """Return a snapshot's held pages to their pool's allocator.
+
+    Disowned pages belong to nobody's cache view, so this is pure allocator
+    bookkeeping.  Idempotent: the page fields are cleared.
+    """
+    if snap.blocks is not None and snap.pool is not None:
+        snap.pool.allocator.release(snap.blocks)
+    snap.blocks = None
+    snap.pool = None
+    snap.ssm = None
+    snap.conv = None
+
+
+def migrate_batch(dst: ServingEngine, snaps: list[InflightSnapshot]
+                  ) -> MigrationReport:
+    """Restore a batch of exported requests on ``dst``, cheapest path first.
+
+    Page-bearing snapshots go through ``import_by_pages`` (handoff or device
+    copy); whatever the destination cannot hold by pages — plus queued
+    requests that never had pages — falls back to ``import_inflight``
+    (re-prefill), batched so same-length contexts share one forward pass at
+    admission.  Every held page ends owned by ``dst`` or released here.
+    """
+    report = MigrationReport()
+    paged = [s for s in snaps if s.blocks is not None and s.generated]
+    rest = [s for s in snaps if not (s.blocks is not None and s.generated)]
+    # capture per-snapshot path info before adoption clears the page fields
+    meta = {id(s): (s.pool is dst.cache.pool, len(s.blocks)) for s in paged}
+    rejected = dst.import_by_pages(paged)
+    rejected_ids = {id(s) for s in rejected}
+    for s in paged:
+        if id(s) in rejected_ids:
+            continue
+        same_pool, n = meta[id(s)]
+        if same_pool:
+            report.handoff += 1
+            report.pages_handoff += n
+        else:
+            report.copied += 1
+            report.pages_copied += n
+    fallback = rejected + rest
+    for s in fallback:
+        release_snapshot_pages(s)
+        if s.generated:
+            report.reprefilled += 1
+            report.recompute_tokens += len(s.prompt) + len(s.generated)
+        else:
+            report.requeued += 1
+    if fallback:
+        dst.import_inflight(fallback)
+    return report

@@ -22,6 +22,11 @@ class Request:
     in_len: int
     out_len: int
     type_id: int = -1       # k-means label, filled by the clusterer
+    # per-type SLO budgets (seconds; inf = unconstrained).  TTFT bounds the
+    # wait + prefill; TPOT bounds the mean inter-token gap during decode —
+    # the goodput / SLO-attainment metrics count only requests within both.
+    ttft_budget: float = float("inf")
+    tpot_budget: float = float("inf")
     # bookkeeping (simulator)
     replica: int = -1
     start: float = -1.0
@@ -35,6 +40,39 @@ class Request:
     @property
     def ttft(self) -> float:
         return self.first_token - self.arrival
+
+    @property
+    def tpot(self) -> float:
+        """Mean time per output token after the first."""
+        return (self.finish - self.first_token) / max(self.out_len - 1, 1)
+
+    @property
+    def slo_met(self) -> bool:
+        return (self.finish >= 0 and self.first_token >= 0
+                and self.ttft <= self.ttft_budget
+                and self.tpot <= self.tpot_budget)
+
+
+def apply_slo_budgets(requests: list["Request"],
+                      ttft_base: float = 10.0,
+                      ttft_per_token: float = 0.01,
+                      tpot_interactive: float = 0.06,
+                      tpot_batch: float = 0.12,
+                      interactive_out: int = 256) -> list["Request"]:
+    """Attach per-type latency budgets (seeds SLO-aware admission).
+
+    TTFT budgets scale with prompt length (prefill is paid inside them);
+    TPOT budgets are tighter for short-output (interactive) types than for
+    long-generation (batch-ish) ones, mirroring how serving SLOs are
+    usually quoted.  Defaults sit near the calibrated simulator's p90s, so
+    attainment separates policies instead of saturating at 1.0.  Returns
+    the same list for chaining.
+    """
+    for r in requests:
+        r.ttft_budget = ttft_base + ttft_per_token * r.in_len
+        r.tpot_budget = (tpot_interactive if r.out_len <= interactive_out
+                         else tpot_batch)
+    return requests
 
 
 # Archetypes roughly matching the paper's taxonomy (S2): chat / extraction

@@ -60,6 +60,11 @@ class SimResult:
         dur = self.spans * self.span_seconds
         out = {"completed": done, "throughput_rps": done / dur,
                "dropped": self.dropped}
+        # goodput: only requests inside their TTFT + TPOT budgets count
+        # (requests without budgets — inf — count whenever they finish)
+        good = sum(1 for r in self.requests if r.slo_met)
+        out["goodput_rps"] = good / dur
+        out["slo_attainment"] = good / max(len(self.requests), 1)
         if done:
             out.update(
                 avg_latency=float(lat.mean()),

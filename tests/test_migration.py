@@ -1,0 +1,401 @@
+"""KV migration subsystem: page handoff, device copy/relayout, chunked
+prefill, and the migration-aware switch cost.
+
+Acceptance (ISSUE 3): a 2-span heterogeneous deployment switch with long
+in-flight contexts is token-for-token identical to an uninterrupted run
+while recomputing ZERO prefill tokens for same-pool migrations — asserted
+through the engines' prefill-token counters.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, get_smoke_config
+from repro.core.costmodel import CostModel
+from repro.core.orchestrator import Orchestrator, OrchestratorConfig
+from repro.core.types import ClusterSpec, H100_SPEC, WorkloadType
+from repro.models import init_params
+from repro.serving.cluster import ClusterRuntime
+from repro.serving.engine import ServingEngine
+from repro.serving.kvcache import BlockPool
+from repro.serving.migration import (MigrationReport, migrate_batch,
+                                     release_snapshot_pages)
+
+ARCH = [WorkloadType(1275, 287), WorkloadType(139, 133),
+        WorkloadType(1181, 1824), WorkloadType(282, 1121)]
+
+
+def ws(rates):
+    return [a.with_rate(float(r)) for a, r in zip(ARCH, rates)]
+
+
+@pytest.fixture(scope="module")
+def cfg_params():
+    cfg = get_smoke_config("yi-9b")
+    params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    return cfg, params
+
+
+def _orchestrator(chips: int) -> Orchestrator:
+    cm = CostModel(get_config("opt-30b").profile(), hw=H100_SPEC)
+    return Orchestrator(cm, ClusterSpec(chips, hw=H100_SPEC),
+                        OrchestratorConfig(search_patience=10))
+
+
+def _jobs(cfg, rng, specs):
+    return [(rng.randint(0, cfg.vocab_size, n).astype(np.int32), new)
+            for n, new in specs]
+
+
+def _reference(cfg, params, jobs):
+    eng = ServingEngine(cfg, params, num_blocks=256, block_size=8, max_seqs=8)
+    for i, (p, n) in enumerate(jobs):
+        eng.submit(i, p, n)
+    return {r.rid: r.generated for r in eng.run_to_completion()}
+
+
+# ---------------------------------------------------------------------------
+# Page handoff: same-pool migration recomputes nothing and moves no data.
+# ---------------------------------------------------------------------------
+
+
+def test_same_pool_handoff_zero_recompute_token_parity(cfg_params):
+    cfg, params = cfg_params
+    rng = np.random.RandomState(0)
+    jobs = _jobs(cfg, rng, ((40, 6), (8, 8), (21, 5)))
+    expected = _reference(cfg, params, jobs)
+
+    pool = BlockPool(cfg, 64, 8)
+    src = ServingEngine(cfg, params, block_size=8, max_seqs=4, pool=pool,
+                        kv_quota=32)
+    dst = ServingEngine(cfg, params, block_size=8, max_seqs=4, pool=pool,
+                        kv_quota=32)
+    for i, (p, n) in enumerate(jobs):
+        src.submit(i, p, n)
+    got = {}
+    for _ in range(3):
+        for r in src.step():
+            got[r.rid] = r.generated
+    snaps = src.export_inflight(release=False)
+    assert snaps and all(s.blocks for s in snaps)
+    src.release_all()
+
+    report = migrate_batch(dst, snaps)
+    assert report.handoff == len(snaps)
+    assert report.copied == report.reprefilled == 0
+    assert report.pages_handoff > 0 and report.recompute_tokens == 0
+    for r in dst.run_to_completion():
+        got[r.rid] = r.generated
+    assert got == expected
+    assert dst.prefill_tokens == 0          # the zero-recompute guarantee
+    assert pool.allocator.n_free == 64 and pool.reserved == 0
+
+
+def test_handoff_rejected_falls_back_to_reprefill(cfg_params):
+    """A destination without slot/quota headroom re-prefills instead of
+    adopting — and the snapshot's orphaned pages are released, not leaked."""
+    cfg, params = cfg_params
+    rng = np.random.RandomState(1)
+    jobs = _jobs(cfg, rng, ((16, 6), (16, 6)))
+    expected = _reference(cfg, params, jobs)
+
+    pool = BlockPool(cfg, 32, 8)
+    src = ServingEngine(cfg, params, block_size=8, max_seqs=2, pool=pool,
+                        kv_quota=16)
+    # dst quota too small to adopt both sequences' lifetime reservations
+    dst = ServingEngine(cfg, params, block_size=8, max_seqs=2, pool=pool,
+                        kv_quota=4, max_blocks_per_seq=4)
+    for i, (p, n) in enumerate(jobs):
+        src.submit(i, p, n)
+    got = {}
+    for _ in range(2):
+        for r in src.step():
+            got[r.rid] = r.generated
+    snaps = src.export_inflight(release=False)
+    src.release_all()
+    report = migrate_batch(dst, snaps)
+    assert report.handoff + report.reprefilled == len(snaps)
+    assert report.reprefilled >= 1           # at least one fell back
+    assert report.recompute_tokens > 0
+    for r in dst.run_to_completion():
+        got[r.rid] = r.generated
+    assert got == expected
+    assert pool.allocator.n_free == 32 and pool.reserved == 0
+
+
+def test_release_snapshot_pages_is_idempotent(cfg_params):
+    cfg, params = cfg_params
+    rng = np.random.RandomState(2)
+    pool = BlockPool(cfg, 32, 8)
+    eng = ServingEngine(cfg, params, block_size=8, max_seqs=2, pool=pool,
+                        kv_quota=32)
+    eng.submit(0, rng.randint(0, cfg.vocab_size, 16).astype(np.int32), 6)
+    eng.step()
+    (snap,) = eng.export_inflight(release=False)
+    assert pool.allocator.n_free < 32
+    release_snapshot_pages(snap)
+    release_snapshot_pages(snap)             # second call is a no-op
+    assert pool.allocator.n_free == 32
+
+
+@pytest.mark.parametrize("arch", ["hymba-1.5b", "mamba2-370m"])
+def test_handoff_carries_ssm_state(arch):
+    """Hybrid (attn+SSM) and attn-free archs migrate too: the snapshot
+    carries the SSM state rows alongside (or instead of) the KV pages."""
+    cfg = get_smoke_config(arch)
+    params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    rng = np.random.RandomState(8)
+    jobs = _jobs(cfg, rng, ((16, 5), (9, 6)))
+    expected = _reference(cfg, params, jobs)
+
+    pool = BlockPool(cfg, 32, 8)
+    src = ServingEngine(cfg, params, block_size=8, max_seqs=2, pool=pool,
+                        kv_quota=32)
+    dst = ServingEngine(cfg, params, block_size=8, max_seqs=2, pool=pool,
+                        kv_quota=32)
+    for i, (p, n) in enumerate(jobs):
+        src.submit(i, p, n)
+    got = {}
+    for _ in range(2):
+        for r in src.step():
+            got[r.rid] = r.generated
+    snaps = src.export_inflight(release=False)
+    assert all(s.ssm is not None for s in snaps)
+    src.release_all()
+    report = migrate_batch(dst, snaps)
+    assert report.handoff == len(snaps) and report.recompute_tokens == 0
+    for r in dst.run_to_completion():
+        got[r.rid] = r.generated
+    assert got == expected
+
+
+# ---------------------------------------------------------------------------
+# Cross-pool migration: jitted page copy, and relayout across geometries.
+# ---------------------------------------------------------------------------
+
+
+def test_cross_pool_copy_token_parity(cfg_params):
+    cfg, params = cfg_params
+    rng = np.random.RandomState(3)
+    jobs = _jobs(cfg, rng, ((40, 6), (12, 7)))
+    expected = _reference(cfg, params, jobs)
+
+    pool_a = BlockPool(cfg, 64, 8)
+    pool_b = BlockPool(cfg, 64, 8)
+    src = ServingEngine(cfg, params, block_size=8, max_seqs=2, pool=pool_a,
+                        kv_quota=64)
+    dst = ServingEngine(cfg, params, block_size=8, max_seqs=2, pool=pool_b,
+                        kv_quota=64)
+    for i, (p, n) in enumerate(jobs):
+        src.submit(i, p, n)
+    got = {}
+    for _ in range(2):
+        for r in src.step():
+            got[r.rid] = r.generated
+    snaps = src.export_inflight(release=False)
+    src.release_all()
+    report = migrate_batch(dst, snaps)
+    assert report.copied == len(snaps) and report.handoff == 0
+    assert report.pages_copied > 0
+    for r in dst.run_to_completion():
+        got[r.rid] = r.generated
+    assert got == expected
+    assert dst.prefill_tokens == 0           # copy still recomputes nothing
+    assert pool_a.allocator.n_free == 64     # source pages released
+
+
+def test_cross_pool_relayout_different_block_size(cfg_params):
+    cfg, params = cfg_params
+    rng = np.random.RandomState(4)
+    jobs = _jobs(cfg, rng, ((21, 6), (9, 5)))
+    expected = _reference(cfg, params, jobs)
+
+    pool_a = BlockPool(cfg, 64, 8)
+    pool_b = BlockPool(cfg, 128, 4)          # mismatched page geometry
+    src = ServingEngine(cfg, params, block_size=8, max_seqs=2, pool=pool_a,
+                        kv_quota=64)
+    dst = ServingEngine(cfg, params, block_size=4, max_seqs=2, pool=pool_b,
+                        kv_quota=128)
+    for i, (p, n) in enumerate(jobs):
+        src.submit(i, p, n)
+    got = {}
+    for _ in range(2):
+        for r in src.step():
+            got[r.rid] = r.generated
+    snaps = src.export_inflight(release=False)
+    src.release_all()
+    report = migrate_batch(dst, snaps)
+    assert report.copied == len(snaps)
+    for r in dst.run_to_completion():
+        got[r.rid] = r.generated
+    assert got == expected
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill: parity with one-shot, and decode never stalls.
+# ---------------------------------------------------------------------------
+
+
+def test_chunked_prefill_token_parity(cfg_params):
+    cfg, params = cfg_params
+    rng = np.random.RandomState(5)
+    jobs = _jobs(cfg, rng, ((40, 6), (8, 8), (21, 5), (33, 4)))
+    expected = _reference(cfg, params, jobs)
+    eng = ServingEngine(cfg, params, num_blocks=64, block_size=8, max_seqs=4,
+                        prefill_chunk_tokens=8)
+    for i, (p, n) in enumerate(jobs):
+        eng.submit(i, p, n)
+    got = {r.rid: r.generated for r in eng.run_to_completion()}
+    assert got == expected
+    # chunking re-processes nothing: counter equals total context tokens
+    assert eng.prefill_tokens == sum(len(p) for p, _ in jobs)
+
+
+def test_chunked_prefill_interleaves_with_decode(cfg_params):
+    """While a long prompt streams in chunk by chunk, the already-running
+    sequence keeps emitting a token every step (no decode stall)."""
+    cfg, params = cfg_params
+    rng = np.random.RandomState(6)
+    short = rng.randint(0, cfg.vocab_size, 8).astype(np.int32)
+    long = rng.randint(0, cfg.vocab_size, 64).astype(np.int32)
+    eng = ServingEngine(cfg, params, num_blocks=64, block_size=8, max_seqs=2,
+                        prefill_chunk_tokens=8)
+    eng.submit(0, short, 20)
+    eng.step()                               # short is admitted + prefilled
+    eng.submit(1, long, 4)
+    counts = []
+    for _ in range(8):                       # 64/8 = 8 chunks to stream in
+        before = len(eng.active[0].generated)
+        eng.step()
+        counts.append(len(eng.active[0].generated) - before)
+    assert all(c == 1 for c in counts), counts   # one token every step
+    r1 = eng.active[[s for s, r in eng.active.items() if r.rid == 1][0]]
+    assert r1.generated                      # long prompt finished prefill
+    got = {r.rid: r.generated for r in eng.run_to_completion()}
+    ref = _reference(cfg, params, [(short, 20), (long, 4)])
+    assert got == ref
+
+
+def test_chunked_prefill_in_reprefill_fallback(cfg_params):
+    """Cross-pool re-prefill fallback of a long migrated context runs
+    through the chunked path on the destination."""
+    cfg, params = cfg_params
+    rng = np.random.RandomState(7)
+    prompt = rng.randint(0, cfg.vocab_size, 40).astype(np.int32)
+    expected = _reference(cfg, params, [(prompt, 8)])
+
+    src = ServingEngine(cfg, params, num_blocks=64, block_size=8, max_seqs=2)
+    src.submit(0, prompt, 8)
+    src.step(); src.step()
+    snaps = src.export_inflight()            # token-state export (release)
+    dst = ServingEngine(cfg, params, num_blocks=64, block_size=8, max_seqs=2,
+                        prefill_chunk_tokens=8)
+    dst.import_inflight(snaps)
+    got = {r.rid: r.generated for r in dst.run_to_completion()}
+    assert got == expected
+    ctx = len(prompt) + len(snaps[0].generated)
+    assert dst.prefill_tokens == ctx         # chunked, but exactly once
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: 2-span heterogeneous switch, long in-flight contexts, token
+# parity with an uninterrupted run, ZERO prefill tokens recomputed.
+# ---------------------------------------------------------------------------
+
+
+def test_cluster_switch_page_handoff_zero_recompute(cfg_params):
+    cfg, params = cfg_params
+    orch = _orchestrator(6)
+    # drain_steps=0: everything in flight at the switch must migrate
+    rt = ClusterRuntime(cfg, params, orch, blocks_per_chip=24,
+                        seqs_per_chip=1, block_size=8, drain_steps=0)
+    rng = np.random.RandomState(0)
+    jobs = {}
+    rid = 0
+    deployments = []
+    reports = []
+    for rates in ([5, 300, 2, 3], [40, 10, 60, 40]):
+        plan = orch.plan_span(ws(rates))
+        deployments.append(plan.deployment)
+        reports.append(rt.apply_plan(plan))
+        for i in range(4):
+            t = int(rng.randint(0, 4))
+            # long prompts: in flight across the span boundary with real
+            # multi-page contexts (24-40 tokens, 3-5 pages each)
+            prompt = rng.randint(0, cfg.vocab_size,
+                                 24 + 4 * t).astype(np.int32)
+            jobs[rid] = (prompt, 10 + t)
+            rt.submit(rid, prompt, 10 + t, type_id=t)
+            rid += 1
+        for _ in range(4):                   # partial progress only
+            rt.step()
+        rt.finish_span()
+    rt.run_until_idle()
+
+    assert deployments[0].replicas != deployments[1].replicas
+    switch = reports[1]
+    assert switch.changed, "no replica was rebuilt"
+    assert switch.migrated >= 1, "no in-flight request was migrated"
+    # every migration rode the page-handoff path: zero recompute
+    assert switch.handoff == switch.migrated
+    assert switch.reprefilled == 0 and switch.copied == 0
+    assert switch.recompute_tokens == 0
+    assert switch.pages_handoff > 0
+
+    # prefill forwards processed each admitted context exactly once
+    assert rt.total_prefill_tokens == sum(len(p) for p, _ in jobs.values())
+
+    # token-for-token parity with an uninterrupted single engine
+    assert len(rt.results) == rid
+    ref = ServingEngine(cfg, params, num_blocks=256, block_size=8, max_seqs=8)
+    for r, (prompt, n) in jobs.items():
+        ref.submit(r, prompt, n)
+    expected = {r.rid: r.generated for r in ref.run_to_completion()}
+    for r in range(rid):
+        assert rt.results[r].generated == expected[r], f"rid {r} diverged"
+
+
+# ---------------------------------------------------------------------------
+# Migration-aware switch cost in the orchestrator.
+# ---------------------------------------------------------------------------
+
+
+def test_orchestrator_prefers_handoff_friendly_switches():
+    """With heavy in-flight contexts and NO shared pool, the KV stall raises
+    the switch bar enough to hold the current deployment; the same state
+    with page handoff available (shared pool) switches freely."""
+    r1, r2 = [5, 300, 2, 3], [40, 10, 60, 40]
+    lens = [8000] * 1000                     # long contexts, many requests
+
+    base = _orchestrator(6)
+    base.plan_span(ws(r1))
+    plan = base.plan_span(ws(r2))
+    assert plan.changed_replicas, "scenario must switch without a penalty"
+    assert plan.kv_migration_seconds == 0.0  # nothing in flight observed
+
+    shared = _orchestrator(6)
+    shared.plan_span(ws(r1))
+    shared.observe_inflight(lens, shared_pool=True)
+    plan_shared = shared.plan_span(ws(r2))
+    assert plan_shared.changed_replicas      # handoff is free: still switch
+    assert plan_shared.kv_migration_seconds == 0.0
+
+    sep = _orchestrator(6)
+    sep.plan_span(ws(r1))
+    sep.observe_inflight(lens, shared_pool=False)
+    assert sep.switch_kv_seconds() > 10.0    # tens of seconds of KV moves
+    plan_sep = sep.plan_span(ws(r2))
+    assert not plan_sep.changed_replicas, (
+        "a switch that stalls minutes of KV transfer must not clear the "
+        "hysteresis bar")
+
+
+def test_migration_report_merge():
+    a = MigrationReport(handoff=1, pages_handoff=3)
+    b = MigrationReport(copied=2, pages_copied=5, recompute_tokens=7,
+                        reprefilled=1)
+    a.merge(b)
+    assert (a.handoff, a.copied, a.reprefilled) == (1, 2, 1)
+    assert a.migrated == 4
+    assert (a.pages_handoff, a.pages_copied, a.recompute_tokens) == (3, 5, 7)
