@@ -2,6 +2,7 @@ from repro.models.config import ModelConfig  # noqa: F401
 from repro.models.model import (  # noqa: F401
     DecodeCache,
     PagedDecodeState,
+    decode_loop_paged,
     decode_step,
     decode_step_paged,
     forward,

@@ -147,6 +147,23 @@ def full_attention(x: jax.Array, p: dict, cfg: ModelConfig,
     return out @ p["wo"]
 
 
+def _gather_pages_dense(k_pages: jax.Array, v_pages: jax.Array,
+                        block_table: jax.Array, head_dim: int
+                        ) -> tuple[jax.Array, jax.Array]:
+    """Gather a block table's pages as dense [B, n_pages * page, Hkv, D]
+    caches (kernel-native pool layout in, head_pad columns dropped).  The
+    ONE page->dense layout transform — every jnp attention path shares it,
+    so a pool-layout change cannot silently desynchronize them.
+    """
+    B = block_table.shape[0]
+    k = k_pages[block_table]                # [B, n, Hkv, page, D]
+    v = v_pages[block_table]
+    _, n, Hkv, page, D = k.shape
+    k = jnp.moveaxis(k, 3, 2).reshape(B, n * page, Hkv, D)
+    v = jnp.moveaxis(v, 3, 2).reshape(B, n * page, Hkv, D)
+    return k[..., :head_dim], v[..., :head_dim]
+
+
 def paged_attention_jnp(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
                         block_table: jax.Array, lens: jax.Array,
                         start: jax.Array, cfg: ModelConfig) -> jax.Array:
@@ -161,13 +178,7 @@ def paged_attention_jnp(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
     paths all agree token-for-token under greedy decode.
     """
     from repro.kernels.ref import flash_decode_ref
-    B = q.shape[0]
-    k = k_pages[block_table]                # [B, n, Hkv, page, D]
-    v = v_pages[block_table]
-    _, n, Hkv, page, D = k.shape
-    k = jnp.moveaxis(k, 3, 2).reshape(B, n * page, Hkv, D)
-    v = jnp.moveaxis(v, 3, 2).reshape(B, n * page, Hkv, D)
-    k, v = k[..., :cfg.head_dim], v[..., :cfg.head_dim]   # drop head_pad
+    k, v = _gather_pages_dense(k_pages, v_pages, block_table, cfg.head_dim)
     return flash_decode_ref(q, k, v, lens, start=start,
                             softcap=float(cfg.attn_logit_softcap))
 
@@ -179,6 +190,12 @@ def paged_decode_attention(x: jax.Array, p: dict, cfg: ModelConfig,
                            impl: str = "jnp", interpret: bool = False
                            ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """One decode step directly against the paged KV pool (gather-free).
+
+    Also the body of the fused multi-step horizon loop
+    (``models.decode_loop_paged``): the pool scatter + table read are pure
+    functional updates on the scan carry, so H consecutive steps run
+    device-resident with the caller's block table pre-extended for all H
+    tokens — nothing here may touch the host.
 
     Args:
       x: [B, 1, d_model] current token embedding.
@@ -233,6 +250,69 @@ def paged_decode_attention(x: jax.Array, p: dict, cfg: ModelConfig,
     return out @ p["wo"], k_pages, v_pages
 
 
+def paged_decode_attention_buffered(x: jax.Array, p: dict, cfg: ModelConfig,
+                                    k_pages: jax.Array, v_pages: jax.Array,
+                                    block_table: jax.Array,
+                                    pool_lens: jax.Array,
+                                    kh: jax.Array, vh: jax.Array,
+                                    step_idx: jax.Array,
+                                    is_local: jax.Array | bool = False
+                                    ) -> tuple[jax.Array, jax.Array,
+                                               jax.Array]:
+    """One decode step of the fused horizon loop: pools stay READ-ONLY.
+
+    Inside a ``lax.scan`` over H decode steps, writing the per-step K/V
+    token into the paged pool would force the whole pool through the scan
+    carry (an O(pool) copy per token on backends without aliasing).
+    Instead the horizon's new K/V lives in a small side buffer ``kh``/``vh``
+    ([B, H, Hkv, head_dim], scan-carried), and attention overlays the
+    buffer onto the gathered pages at its absolute positions — producing
+    the *bit-identical* dense cache the scatter-first path would have
+    gathered (overwritten lanes past the valid length are masked to exact
+    zeros either way), so tokens match the per-step path exactly.  The
+    caller scatters the buffer into the pool once per horizon
+    (``models.decode_loop_paged``).
+
+    Args:
+      x: [B, 1, d_model] current token embedding.
+      k_pages / v_pages: [P, Hkv, page, D] one layer's pool (not written).
+      block_table: [B, n_pages] physical page ids covering the horizon.
+      pool_lens: [B] tokens resident in pages BEFORE the horizon started.
+      kh / vh: [B, H, Hkv, head_dim] this horizon's K/V so far; position
+        ``step_idx`` is written here.
+      step_idx: scalar int32 — loop iteration (absolute position is
+        ``pool_lens + step_idx``).
+    Returns: (attn_out [B, 1, d_model], new kh, new vh)
+    """
+    from repro.kernels.ref import flash_decode_ref
+    B = x.shape[0]
+    H = kh.shape[1]
+    pos = pool_lens + step_idx
+    q, k_new, v_new = _project_qkv(x, p, cfg, pos[:, None])
+    kh = kh.at[:, step_idx].set(k_new[:, 0].astype(kh.dtype))
+    vh = vh.at[:, step_idx].set(v_new[:, 0].astype(vh.dtype))
+
+    # gather the paged prefix, then overlay the horizon buffer at its
+    # absolute positions (entries past ``lens`` are masked out below, so
+    # the not-yet-generated tail of the buffer is harmless)
+    k, v = _gather_pages_dense(k_pages, v_pages, block_table, cfg.head_dim)
+    bidx = jnp.arange(B)[:, None]
+    tpos = pool_lens[:, None] + jnp.arange(H)[None, :]    # [B, H]
+    k = k.at[bidx, tpos].set(kh)
+    v = v.at[bidx, tpos].set(vh)
+
+    len_att = pos + 1
+    if cfg.local_window > 0:
+        lo = jnp.maximum(len_att - cfg.local_window, 0)
+        start = jnp.where(jnp.asarray(is_local), lo, 0)
+    else:
+        start = jnp.zeros_like(len_att)
+    out = flash_decode_ref(q[:, 0], k, v, len_att, start=start,
+                           softcap=float(cfg.attn_logit_softcap))
+    out = out.reshape(B, 1, cfg.q_dim)
+    return out @ p["wo"], kh, vh
+
+
 def prefill_chunk_attention(x: jax.Array, p: dict, cfg: ModelConfig,
                             k_pages: jax.Array, v_pages: jax.Array,
                             block_table: jax.Array, start: jax.Array,
@@ -277,12 +357,9 @@ def prefill_chunk_attention(x: jax.Array, p: dict, cfg: ModelConfig,
 
     # gather prefix + chunk through the table (pages past the live length
     # hold trash and are position-masked below)
-    k = k_pages[block_table]                  # [B, n, Hkv, page, D]
-    v = v_pages[block_table]
-    k = jnp.moveaxis(k, 3, 2).reshape(B, n_pages * page, Hkv, -1)
-    v = jnp.moveaxis(v, 3, 2).reshape(B, n_pages * page, Hkv, -1)
-    k = _expand_kv(k[..., :cfg.head_dim], cfg.n_q_heads).astype(q.dtype)
-    v = _expand_kv(v[..., :cfg.head_dim], cfg.n_q_heads).astype(q.dtype)
+    k, v = _gather_pages_dense(k_pages, v_pages, block_table, cfg.head_dim)
+    k = _expand_kv(k, cfg.n_q_heads).astype(q.dtype)
+    v = _expand_kv(v, cfg.n_q_heads).astype(q.dtype)
     out = _attend(q, k, v, cfg, pos, jnp.arange(n_pages * page), is_local)
     out = out.reshape(B, C, cfg.q_dim)
     return out @ p["wo"], k_pages, v_pages

@@ -12,6 +12,8 @@ Entry points:
   forward(params, cfg, tokens|embeds)    -> logits           (train)
   prefill(params, cfg, tokens)           -> (logits, DecodeCache)
   decode_step(params, cfg, token, cache) -> (logits, DecodeCache)
+  decode_loop_paged(params, cfg, tokens, state, key, step0, horizon)
+      -> ([B, horizon] tokens, PagedDecodeState)   (fused multi-step decode)
 """
 from __future__ import annotations
 
@@ -158,6 +160,14 @@ def _mixer(x, bp, cfg: ModelConfig, layer_idx, positions, mode,
             attn_out, new_k, new_v = attn_lib.prefill_chunk_attention(
                 x, bp["attn"], cfg, kv[0], kv[1], paged["table"], pos,
                 paged["n_valid"], paged["trash"], is_local)
+        elif mode == "decode" and paged is not None \
+                and paged["impl"] == "buffered":
+            # horizon loop: pools read-only, new K/V rides the side buffer
+            # (new_k/new_v are the updated buffer rows, not pools)
+            attn_out, new_k, new_v = attn_lib.paged_decode_attention_buffered(
+                x, bp["attn"], cfg, kv[0], kv[1], paged["table"],
+                paged["pool_lens"], paged["kh"], paged["vh"], paged["step"],
+                is_local)
         elif mode == "decode" and paged is not None:
             attn_out, new_k, new_v = attn_lib.paged_decode_attention(
                 x, bp["attn"], cfg, kv[0], kv[1], paged["table"], pos,
@@ -463,3 +473,140 @@ def decode_step_paged(params, cfg: ModelConfig, tokens,
         block_table=state.block_table, lens=state.lens + 1,
         ssm=ys.get("ssm", state.ssm), conv=ys.get("conv", state.conv))
     return logits, new_state
+
+
+def _decode_core_buffered(params, cfg: ModelConfig, tokens, pos, k, v,
+                          ssm, conv, table, kh, vh, step_idx, pool_lens):
+    """One buffered decode step: like ``_decode_core`` in paged mode, but
+    the pools are consumed READ-ONLY (scan xs of the layer scan — never
+    copied) and each layer's new K/V token is written to its row of the
+    horizon buffer ``kh``/``vh`` [L, B, H, Hkv, head_dim], which the layer
+    scan re-stacks into ``ys["k"]``/``ys["v"]``.
+    """
+    positions = pos[:, None]
+    x = embed_inputs(params, cfg, tokens[:, None], None, positions)
+    x = logical(x, "batch", "seq", "d_model")
+
+    def body(x, scanned):
+        bp, layer_idx, k_l, v_l, kh_l, vh_l, ssm_l, conv_l = scanned
+        paged = {"impl": "buffered", "table": table, "kh": kh_l, "vh": vh_l,
+                 "step": step_idx, "pool_lens": pool_lens}
+        x, new_kv, new_ssm, _ = _block(
+            x, bp, cfg, layer_idx, positions, "decode",
+            kv=(k_l, v_l), ssm_state=ssm_l, conv=conv_l, pos=pos,
+            paged=paged)
+        ys = {}
+        if cfg.has_attn:
+            ys["k"], ys["v"] = new_kv          # updated buffer rows
+        if cfg.has_ssm:
+            ys["ssm"], ys["conv"] = new_ssm
+        return x, ys
+
+    L = cfg.n_layers
+    dummy = jnp.zeros((L,), jnp.int32)
+    xs = (params["blocks"], jnp.arange(L),
+          k if k is not None else dummy,
+          v if v is not None else dummy,
+          kh if kh is not None else dummy,
+          vh if vh is not None else dummy,
+          ssm if ssm is not None else dummy,
+          conv if conv is not None else dummy)
+    x, ys = jax.lax.scan(body, x, xs, unroll=cfg.scan_unroll)
+    return lm_logits(params, cfg, x)[:, 0], ys
+
+
+def decode_loop_paged(params, cfg: ModelConfig, tokens,
+                      state: PagedDecodeState, key, step0, horizon: int, *,
+                      attn_impl: str = "jnp", interpret: bool = False,
+                      temperature: float = 0.0):
+    """``horizon`` fused decode steps, entirely on device (``lax.scan``).
+
+    Each scan iteration runs one full paged decode step — attention over
+    the block table, SSM state update — then samples the next token with
+    the per-step folded key (``sampling.step_key(key, step0 + i)``) and
+    feeds it straight back as the next step's input, so generating
+    ``horizon`` tokens costs one jit dispatch and (at the caller) one
+    device→host transfer instead of ``horizon`` of each.
+
+    K/V pool traffic is O(pool) per HORIZON, not per token: for the jnp
+    attention path the pools are scan *constants* — each step writes its
+    K/V token into a [L, B, H, Hkv, D] side buffer that attention overlays
+    onto the gathered pages (bit-identical result, see
+    ``attention.paged_decode_attention_buffered``) — and the buffer is
+    scattered through the block table once after the loop.  The Pallas
+    kernel path keeps the scatter-first loop (the kernel reads pages in
+    place, and on TPU buffer donation makes the in-loop pool updates
+    in-place).
+
+    The caller must have pre-extended page capacity for ``horizon`` more
+    tokens per sequence: positions ``lens .. lens + horizon - 1`` are
+    written through the block table with no host allocation in the loop.
+    ``step0`` is the global decode-step counter (a traced scalar is fine);
+    with ``temperature == 0`` the keys are ignored and the loop is exactly
+    ``horizon`` greedy decode steps.
+
+    Args:
+      tokens: [B] int32 — each sequence's last generated token.
+      state: PagedDecodeState at the pre-loop lengths.
+      horizon: static step count (callers bucket it to keep compilations
+        O(log max_horizon)).
+    Returns: (tokens [B, horizon] int32, PagedDecodeState with lens +
+      horizon)
+    """
+    from repro.models.sampling import sample, step_key
+
+    if not cfg.has_attn or attn_impl == "kernel":
+        # scatter-first loop: pools (if any) ride the scan carry
+        def body(carry, i):
+            toks, st = carry
+            logits, st = decode_step_paged(params, cfg, toks, st,
+                                           attn_impl=attn_impl,
+                                           interpret=interpret)
+            toks = sample(logits, cfg, step_key(key, step0 + i),
+                          temperature=temperature)
+            return (toks, st), toks
+
+        (_, state), toks_h = jax.lax.scan(
+            body, (tokens, state), jnp.arange(horizon, dtype=jnp.int32))
+        return jnp.moveaxis(toks_h, 0, 1), state
+
+    # buffered loop (jnp path): pools stay out of the carry
+    B = tokens.shape[0]
+    L = cfg.n_layers
+    pool_lens = state.lens
+    kh = jnp.zeros((L, B, horizon, cfg.n_kv_heads, cfg.head_dim),
+                   state.k.dtype)
+    vh = jnp.zeros_like(kh)
+
+    def body(carry, i):
+        toks, lens, kh, vh, ssm, conv = carry
+        logits, ys = _decode_core_buffered(
+            params, cfg, toks, lens, state.k, state.v, ssm, conv,
+            state.block_table, kh, vh, i, pool_lens)
+        toks = sample(logits, cfg, step_key(key, step0 + i),
+                      temperature=temperature)
+        return (toks, lens + 1, ys["k"], ys["v"],
+                ys.get("ssm", ssm), ys.get("conv", conv)), toks
+
+    init = (tokens, state.lens, kh, vh, state.ssm, state.conv)
+    (_, lens, kh, vh, ssm, conv), toks_h = jax.lax.scan(
+        body, init, jnp.arange(horizon, dtype=jnp.int32))
+
+    # the horizon's ONE pool scatter: buffer -> pages via the block table
+    table = state.block_table
+    page = state.k.shape[3]
+    tpos = pool_lens[:, None] + jnp.arange(horizon)[None, :]      # [B, H]
+    pid = jnp.take_along_axis(table, tpos // page, axis=1)        # [B, H]
+    off = tpos % page
+    dpad = state.k.shape[-1] - kh.shape[-1]
+    if dpad:
+        kh = jnp.pad(kh, ((0, 0),) * 4 + ((0, dpad),))
+        vh = jnp.pad(vh, ((0, 0),) * 4 + ((0, dpad),))
+    hidx = jnp.arange(cfg.n_kv_heads)[None, None, :]
+    k_pages = state.k.at[:, pid[:, :, None], hidx, off[:, :, None]].set(
+        kh.astype(state.k.dtype))
+    v_pages = state.v.at[:, pid[:, :, None], hidx, off[:, :, None]].set(
+        vh.astype(state.v.dtype))
+    new_state = PagedDecodeState(k=k_pages, v=v_pages, block_table=table,
+                                 lens=lens, ssm=ssm, conv=conv)
+    return jnp.moveaxis(toks_h, 0, 1), new_state

@@ -16,6 +16,19 @@ def mask_padded_vocab(logits: jax.Array, cfg: ModelConfig) -> jax.Array:
     return jnp.where(idx[None, :] < cfg.vocab_size, logits, -jnp.inf)
 
 
+def step_key(key: jax.Array, step: jax.Array | int) -> jax.Array:
+    """Per-decode-step PRNG key: fold the global decode-step index into the
+    stream key.
+
+    Both the step-at-a-time decode path and the fused multi-step horizon
+    loop (``models.decode_loop_paged``) derive step ``t``'s key as
+    ``step_key(base, t)``, so the two paths draw the *identical* key
+    sequence and sampled decoding is token-for-token reproducible across
+    horizon sizes.  ``step`` may be a traced scalar (in-loop folding).
+    """
+    return jax.random.fold_in(key, step)
+
+
 def sample(logits: jax.Array, cfg: ModelConfig, key: jax.Array,
            temperature: float = 0.0, top_k: int = 0) -> jax.Array:
     """logits: [B, Vpad] -> token ids [B]."""

@@ -10,8 +10,17 @@ really is a smaller server than a 4-chip one.
 
 Per span, typed requests are routed through any ``Router`` policy
 (``FlowRouter`` realizes the plan's x[k][j] fractions), every replica is
-stepped round-robin on the host, and ``finish_span`` feeds two observations
-back to the orchestrator:
+stepped round-robin on the host — *asynchronously*: each tick fires every
+replica's fused decode dispatch (``engine.step_async``) before syncing any
+tokens back (``engine.finish_step``), so the host never blocks on one
+replica's device→host token transfer before dispatching the next — the N
+transfers and all host-side scheduling overlap the in-flight device work.
+(Replicas sharing one ``BlockPool`` chain their fused calls through the
+pool arrays, so their device *compute* itself is still serialized by data
+dependency; true compute overlap needs disjoint pools/devices.)  With
+``decode_horizon > 1`` each dispatch covers up to that many decode steps
+(one transfer per horizon; see ``ServingEngine``).  ``finish_span`` feeds
+two observations back to the orchestrator:
 
   * ``observe_health`` — per-replica achieved/expected throughput (tokens
     emitted per busy slot-tick), so a straggling replica's EWMA health
@@ -100,6 +109,7 @@ class SpanReport:
     tokens: list[int]                # per-replica tokens emitted
     completed: int                   # requests finished this span
     type_counts: np.ndarray          # realized per-type arrivals [J]
+    shed: int = 0                    # waiting requests rejected (TTFT blown)
 
 
 class ClusterRuntime:
@@ -109,7 +119,8 @@ class ClusterRuntime:
                  router: Router | None = None, drain_steps: int = 4,
                  decode_mode: str = "paged", attn_impl: str = "auto",
                  dtype=jnp.float32, seed: int = 0,
-                 prefill_chunk_tokens: int | None = None):
+                 prefill_chunk_tokens: int | None = None,
+                 decode_horizon: int = 1):
         """Args:
           cfg/params: the (one) model every replica serves — heterogeneity
             is in per-replica capacity, not weights.
@@ -123,6 +134,8 @@ class ClusterRuntime:
             in-flight sequences are exported and migrated.
           prefill_chunk_tokens: chunked-prefill size for every replica
             (None = one-shot prefill; see ``ServingEngine``).
+          decode_horizon: max fused decode steps per replica dispatch
+            (1 = per-step decode; see ``ServingEngine``).
         """
         if total_chips is None:
             if orch is None:
@@ -137,6 +150,7 @@ class ClusterRuntime:
         self.block_size = block_size
         self.drain_steps = drain_steps
         self.prefill_chunk_tokens = prefill_chunk_tokens
+        self.decode_horizon = decode_horizon
         self.decode_mode = decode_mode
         self.attn_impl, _ = resolve_attn_impl(attn_impl)
         self.dtype = dtype
@@ -157,6 +171,12 @@ class ClusterRuntime:
         # prefill-forward tokens of replicas already torn down; together
         # with the live engines' counters this is `total_prefill_tokens`
         self._prefill_tokens_retired = 0
+        # shed (TTFT-blown) rejections: rids of torn-down replicas are
+        # folded in here at switch time, so a caller can always distinguish
+        # a shed request from a still-queued one (it never reaches
+        # ``results``)
+        self.shed_rids: list[int] = []
+        self._span_shed_mark = 0
 
     # -- replica materialization ----------------------------------------------
 
@@ -177,7 +197,8 @@ class ClusterRuntime:
             max_seqs=max_seqs, dtype=self.dtype, greedy=True, seed=self.seed,
             decode_mode=self.decode_mode, attn_impl=self.attn_impl,
             pool=self.pool, kv_quota=quota, max_blocks_per_seq=max_bps,
-            prefill_chunk_tokens=self.prefill_chunk_tokens)
+            prefill_chunk_tokens=self.prefill_chunk_tokens,
+            decode_horizon=self.decode_horizon)
 
     @property
     def total_prefill_tokens(self) -> int:
@@ -186,6 +207,17 @@ class ClusterRuntime:
         handoff path leaves this unchanged — asserted in tests."""
         return (self._prefill_tokens_retired
                 + sum(h.engine.prefill_tokens for h in self.replicas))
+
+    @property
+    def all_shed_rids(self) -> list[int]:
+        """Every rid rejected cluster-wide because its TTFT budget was
+        already blown while still queued (SLO-aware shedding)."""
+        return (self.shed_rids
+                + [r for h in self.replicas for r in h.engine.shed_rids])
+
+    @property
+    def total_shed(self) -> int:
+        return len(self.all_shed_rids)
 
     # -- span plan execution ----------------------------------------------------
 
@@ -240,6 +272,7 @@ class ClusterRuntime:
             #    KV stays resident in the shared pool across the rebuild
             migrate.extend(h.engine.export_inflight(release=False))
             self._prefill_tokens_retired += h.engine.prefill_tokens
+            self.shed_rids.extend(h.engine.shed_rids)
             h.engine.release_all()
 
         # 3) rebuild changed replicas under the new configuration
@@ -293,8 +326,13 @@ class ClusterRuntime:
         return self.router.route(type_id, up)
 
     def submit(self, rid: int, prompt: np.ndarray, max_new_tokens: int,
-               type_id: int = 0) -> int:
-        """Route one typed request to a replica; returns the replica index."""
+               type_id: int = 0, ttft_deadline: float | None = None) -> int:
+        """Route one typed request to a replica; returns the replica index.
+
+        ``ttft_deadline`` (absolute, engine clock) arms SLO-aware shedding:
+        the destination replica rejects the request if the deadline passes
+        before its prefill starts (counted in ``load_stats`` /
+        ``finish_span``)."""
         if not self.replicas:
             raise RuntimeError("no deployment applied yet (call apply_plan)")
         k = self._route(type_id, len(prompt), max_new_tokens)
@@ -302,7 +340,8 @@ class ClusterRuntime:
             raise ValueError(
                 f"request {rid}: context {len(prompt)} + {max_new_tokens} "
                 f"new tokens exceeds every replica's context ceiling")
-        self.replicas[k].engine.submit(rid, prompt, max_new_tokens)
+        self.replicas[k].engine.submit(rid, prompt, max_new_tokens,
+                                       ttft_deadline=ttft_deadline)
         # book-keep only after the engine accepted the request, so rejected
         # submissions don't pollute the observed-rate feedback
         self.rid_type[rid] = type_id
@@ -316,9 +355,19 @@ class ClusterRuntime:
         self._span_completed += 1
 
     def step(self) -> list[EngineRequest]:
-        """One cluster tick: step every replica that has work (round-robin)."""
+        """One cluster tick: step every replica that has work (round-robin).
+
+        Dispatch-then-sync: phase 1 fires every replica's fused decode
+        (``step_async``) without reading anything back; phase 2 syncs each
+        pending token block (``finish_step``) and retires.  The host never
+        blocks on replica i's device→host transfer before dispatching
+        replica i+1, so the transfers and the host-side scheduling overlap
+        the queued device work (shared-pool replicas' device compute still
+        chains through the pool arrays — see the module docstring).
+        """
         self._tick += 1
         finished: list[EngineRequest] = []
+        pending = []
         for h in self.replicas:
             eng = h.engine
             busy = len(eng.active)
@@ -327,11 +376,12 @@ class ClusterRuntime:
                 continue
             if h.period > 1 and self._tick % h.period:
                 continue                  # injected straggler skips this tick
-            t0 = eng.tokens_out
-            for r in eng.step():
+            pending.append((h, eng.tokens_out, eng.step_async()))
+        for h, t0, pend in pending:
+            for r in h.engine.finish_step(pend):
                 self._record_finish(r)
                 finished.append(r)
-            h.emitted_span += eng.tokens_out - t0
+            h.emitted_span += h.engine.tokens_out - t0
         return finished
 
     @property
@@ -366,9 +416,11 @@ class ClusterRuntime:
                 achieved.append(1.0)     # idle replica: no evidence of harm
             else:
                 achieved.append(min(1.0, h.emitted_span / h.slot_ticks))
+        span_shed = self.total_shed - self._span_shed_mark
+        self._span_shed_mark = self.total_shed
         report = SpanReport(achieved, [h.emitted_span for h in self.replicas],
                             self._span_completed,
-                            self._span_type_counts.copy())
+                            self._span_type_counts.copy(), shed=span_shed)
         if self.orch is not None:
             self.orch.observe_health(achieved)
             self.orch.observe_rates(self._span_type_counts)

@@ -5,18 +5,47 @@ then step decode over the active set, emitting one token per sequence per
 step; finished sequences free their pages immediately.  Prefill and decode
 interleave within a step, so admissions never starve running sequences.
 
-The decode path is device-resident end to end: one jitted fused step
-(``decode_step_paged`` + token scatter + sampling) consumes the paged KV
-pool directly through the device block table, with no per-sequence host
-syncs (a single [B] token transfer per step).  On TPU the Pallas paged
-kernel reads pages in place (gather-free); the CPU/jnp fallback still
-gathers the table's pages inside the jit, so its win comes from bucketed
-shapes and the removed host round-trips, not memory traffic.  Active
-batches are padded to power-of-two buckets and the page count to power-of-
-two page buckets, so the number of distinct compilations is
-O(log max_seqs * log max_pages) instead of one per (batch, length) shape.
-The legacy dense-gather path survives as ``decode_mode="dense"`` for A/B
-benchmarking (``benchmarks/bench_engine.py``).
+The decode path is device-resident end to end: one jitted fused call
+(``models.decode_loop_paged``) scans up to ``decode_horizon`` decode steps
+— paged attention, K/V token scatter, SSM update, sampling with per-step
+key folding, and the device ``seq_lens_dev`` advance — against the paged
+KV pool through the device block table, returning a ``[B, H]`` token block
+with **one device→host transfer per horizon** instead of per token.  On
+TPU the Pallas paged kernel reads pages in place (gather-free); the
+CPU/jnp fallback still gathers the table's pages inside the jit, so its
+win comes from bucketed shapes and the removed host round-trips, not
+memory traffic.  Active batches are padded to power-of-two buckets, the
+page count to power-of-two page buckets, and the horizon to a power-of-two
+*floor* of the safe step count, so the number of distinct compilations is
+O(log max_seqs * log max_pages * log decode_horizon) instead of one per
+(batch, length, steps) shape.  The legacy dense-gather path survives as
+``decode_mode="dense"`` for A/B benchmarking (``benchmarks/
+bench_engine.py``).
+
+Horizon contract (``decode_horizon > 1``): the host stays authoritative
+for admission, retirement, block ownership, and ``seq_lens`` — before each
+dispatch it computes the *safe* horizon ``min(decode_horizon, min
+remaining max_new_tokens over the batch)``, collapsed to 1 whenever a
+scheduling event must interleave per step (a request was admitted this
+step, or a chunked prefill is mid-flight), then rounds it DOWN to a power
+of two.  Page capacity for the whole horizon is pre-extended against the
+sequence's admission-time lifetime reservation (``kvcache.extend_for``),
+so the device loop writes new tokens through the block table with no host
+allocation; host ``seq_lens`` advances at dispatch and the device mirror
+advances inside the loop, so the two re-converge at every sync.  Under
+greedy decoding the token stream is identical for every horizon size; with
+sampling, per-step key folding (``sampling.step_key``) keeps it identical
+too.  ``decode_horizon=1`` (the default) reproduces the per-step engine
+exactly.
+
+Dispatch/sync split: ``step_async()`` runs the host-side scheduling and
+*fires* the fused decode without reading it back; ``finish_step(pending)``
+performs the one device→host token transfer and retirement.  ``step()``
+is the synchronous composition.  ``ClusterRuntime.step`` uses the split to
+dispatch every replica's fused call before syncing any of them, so the N
+device→host transfers and the host-side scheduling overlap the in-flight
+device work instead of interleaving N blocking round-trips (shared-pool
+replicas' device compute still chains through the pool arrays).
 
 Replica lifecycle API (used by ``repro.serving.cluster.ClusterRuntime`` to
 execute orchestrator deployment switches on live engines):
@@ -60,13 +89,14 @@ instead of each replica reserving a max-size cache.
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models import (DecodeCache, PagedDecodeState, decode_step,
-                          decode_step_paged, prefill, prefill_chunk)
+from repro.models import (DecodeCache, PagedDecodeState, decode_loop_paged,
+                          decode_step, prefill, prefill_chunk)
 from repro.models.config import ModelConfig
 from repro.models.sampling import sample
 from repro.serving.kvcache import (BlockPool, PagedKVCache, copy_blocks,
@@ -98,6 +128,9 @@ class EngineRequest:
     ctx: np.ndarray | None = None
     # chunked prefill: tokens of ``prefill_tokens`` already in pages
     prefill_pos: int = 0
+    # SLO shedding: absolute TTFT deadline (engine clock); a waiting request
+    # whose deadline has passed is rejected before prefill ever starts
+    deadline: float | None = None
 
     @property
     def prefill_tokens(self) -> np.ndarray:
@@ -135,11 +168,31 @@ class InflightSnapshot:
     pool: "BlockPool | None" = None  # the pool the pages live in
     ssm: jax.Array | None = None     # [L, ...] this sequence's SSM state row
     conv: jax.Array | None = None
+    deadline: float | None = None    # TTFT deadline, carried across migration
+
+
+@dataclasses.dataclass
+class PendingDecode:
+    """A dispatched-but-unsynced fused decode horizon.
+
+    Holds the device token block between ``step_async`` and
+    ``finish_step`` so cross-replica dispatch can overlap device work; the
+    single ``np.asarray(tokens)`` in ``finish_step`` is the horizon's one
+    device→host transfer.
+    """
+    slots: list[int]
+    tokens: jax.Array    # [B_bucket, horizon] device-resident token block
+    horizon: int
 
 
 def _pow2_bucket(n: int, cap: int) -> int:
     """Smallest power of two >= n, clipped to cap."""
     return min(cap, 1 << max(0, n - 1).bit_length())
+
+
+def _pow2_floor(n: int) -> int:
+    """Largest power of two <= n (n >= 1)."""
+    return 1 << (n.bit_length() - 1)
 
 
 class ServingEngine:
@@ -149,12 +202,18 @@ class ServingEngine:
                  decode_mode: str = "paged", attn_impl: str = "auto",
                  pool: BlockPool | None = None, kv_quota: int | None = None,
                  max_blocks_per_seq: int | None = None,
-                 prefill_chunk_tokens: int | None = None):
+                 prefill_chunk_tokens: int | None = None,
+                 decode_horizon: int = 1):
         self.cfg = cfg
         self.params = params
         if decode_mode not in ("paged", "dense"):
             raise ValueError(f"unknown decode_mode {decode_mode!r}")
+        if decode_horizon < 1:
+            raise ValueError("decode_horizon must be >= 1")
+        if decode_horizon > 1 and decode_mode != "paged":
+            raise ValueError("decode_horizon > 1 needs decode_mode='paged'")
         self.decode_mode = decode_mode
+        self.decode_horizon = decode_horizon
         attn_impl, self._interpret = resolve_attn_impl(attn_impl)
         self._attn_impl = attn_impl
         # the kernel path wants lane-aligned head_dim; pad the pool once at
@@ -190,6 +249,22 @@ class ServingEngine:
         # tokens that went through a prefill forward (one-shot or chunked);
         # page-handoff migration adds ZERO here — tests assert on it
         self.prefill_tokens = 0
+        # global decode-step counter: step t samples with
+        # step_key(self.key, t) in BOTH the per-step and horizon paths, so
+        # sampled streams are horizon-invariant
+        self._sample_step = 0
+        # one increment per fused-decode device→host sync (the horizon's
+        # single transfer) — benches assert syncs << decode token-steps
+        self.decode_syncs = 0
+        # dispatched horizon histogram {h: count} + the last dispatched h
+        self.horizon_counts: dict[int, int] = {}
+        self.last_horizon = 0
+        # chunked-prefill round-robin rotation pointer
+        self._chunk_rr = 0
+        # SLO shedding: rids rejected because their TTFT budget was already
+        # blown while still waiting; ``clock`` is injectable for tests
+        self.shed_rids: list[int] = []
+        self.clock = time.monotonic
         # chunked prefill needs per-position resumable state; the SSD scan
         # has none, so SSM/hybrid archs keep the one-shot path
         if prefill_chunk_tokens is not None and cfg.has_ssm:
@@ -209,29 +284,34 @@ class ServingEngine:
             donate_argnums=donate)
 
     def _build_fused(self):
-        """The jitted device-resident decode step.
+        """The jitted device-resident decode loop (up to ``horizon`` steps).
 
         Gathers per-slot metadata/state from the full-size device arrays,
-        runs the paged decode, samples, and scatters lens/SSM state back —
-        tokens are the only thing that crosses back to the host.
+        scans ``horizon`` fused decode steps (``models.decode_loop_paged``:
+        attention + K/V scatter + SSM update + in-loop sampled key folding
+        + device lens advance), and scatters lens/SSM state back — the
+        ``[B, horizon]`` token block is the only thing that crosses back to
+        the host, once per horizon.
         """
         cfg, greedy = self.cfg, self.greedy
         impl, interp = self._attn_impl, self._interpret
         trash = self.cache.trash_slot
 
         def fused(params, k, v, table_full, lens_full, ssm_full, conv_full,
-                  slots, tokens, key, n_pages):
+                  slots, tokens, key, step0, n_pages, horizon):
             table = table_full[slots, :n_pages]
             lens = lens_full[slots]
             ssm = ssm_full[:, slots] if ssm_full is not None else None
             conv = conv_full[:, slots] if conv_full is not None else None
             st = PagedDecodeState(k=k, v=v, block_table=table, lens=lens,
                                   ssm=ssm, conv=conv)
-            logits, st = decode_step_paged(params, cfg, tokens, st,
-                                           attn_impl=impl, interpret=interp)
-            toks = sample(logits, cfg, key,
-                          temperature=0.0 if greedy else 1.0)
-            lens_full = lens_full.at[slots].add(1).at[trash].set(0)
+            toks, st = decode_loop_paged(
+                params, cfg, tokens, st, key, step0, horizon,
+                attn_impl=impl, interpret=interp,
+                temperature=0.0 if greedy else 1.0)
+            # padded rows advanced the trash slot's lens inside the loop;
+            # pin it back to 0 so the trash row stays inert
+            lens_full = lens_full.at[slots].set(st.lens).at[trash].set(0)
             if ssm_full is not None:
                 ssm_full = ssm_full.at[:, slots].set(st.ssm)
                 conv_full = conv_full.at[:, slots].set(st.conv)
@@ -239,7 +319,7 @@ class ServingEngine:
 
         # donate the pools/state so XLA updates pages in place (no-op on CPU)
         donate = (1, 2, 4, 5, 6) if jax.default_backend() != "cpu" else ()
-        return jax.jit(fused, static_argnames=("n_pages",),
+        return jax.jit(fused, static_argnames=("n_pages", "horizon"),
                        donate_argnums=donate)
 
     # -- submission ------------------------------------------------------------
@@ -279,10 +359,16 @@ class ServingEngine:
                 f"per-sequence block capacity is "
                 f"{self._capacity_blocks()} x {self.cache.block_size} tokens")
 
-    def submit(self, rid: int, prompt: np.ndarray, max_new_tokens: int) -> None:
+    def submit(self, rid: int, prompt: np.ndarray, max_new_tokens: int,
+               ttft_deadline: float | None = None) -> None:
+        """Queue a request.  ``ttft_deadline`` (engine-clock absolute time)
+        arms SLO-aware shedding: if the deadline passes while the request is
+        still waiting, it is rejected instead of admitted (its TTFT budget
+        is already blown, so prefilling it would only waste capacity)."""
         prompt = np.asarray(prompt, np.int32)
         self._validate(len(prompt), max_new_tokens, rid)
-        self.waiting.append(EngineRequest(rid, prompt, max_new_tokens))
+        self.waiting.append(EngineRequest(rid, prompt, max_new_tokens,
+                                          deadline=ttft_deadline))
 
     def _free_slots(self) -> list[int]:
         return [s for s in range(self.max_seqs) if s not in self.active]
@@ -333,7 +419,8 @@ class ServingEngine:
                 self.cache.release_slot(slot)
                 snaps.append(InflightSnapshot(r.rid, r.prompt,
                                               list(r.generated),
-                                              r.max_new_tokens))
+                                              r.max_new_tokens,
+                                              deadline=r.deadline))
                 continue
             ssm_row = (self.cache.ssm[:, slot]
                        if self.cache.ssm is not None else None)
@@ -343,11 +430,12 @@ class ServingEngine:
             snaps.append(InflightSnapshot(
                 r.rid, r.prompt, list(r.generated), r.max_new_tokens,
                 blocks=blocks, seq_len=seq_len, pool=self.cache.pool,
-                ssm=ssm_row, conv=conv_row))
+                ssm=ssm_row, conv=conv_row, deadline=r.deadline))
         for r in self.waiting:
             snaps.append(InflightSnapshot(r.rid, r.prompt,
                                           list(r.generated),
-                                          r.max_new_tokens))
+                                          r.max_new_tokens,
+                                          deadline=r.deadline))
         self.waiting = []
         return snaps
 
@@ -431,7 +519,8 @@ class ServingEngine:
         """
         for s in snaps:
             if not s.generated:          # never prefilled: plain submission
-                self.submit(s.rid, s.prompt, s.max_new_tokens)
+                self.submit(s.rid, s.prompt, s.max_new_tokens,
+                            ttft_deadline=s.deadline)
                 continue
             remaining = s.max_new_tokens - len(s.generated)
             if remaining < 1:
@@ -459,6 +548,8 @@ class ServingEngine:
             "tokens_out": self.tokens_out,
             "steps": self.steps,
             "prefill_tokens": self.prefill_tokens,
+            "shed": len(self.shed_rids),
+            "decode_syncs": self.decode_syncs,
             "load": (len(self.waiting) + len(self.active)) / self.max_seqs,
         }
 
@@ -474,11 +565,27 @@ class ServingEngine:
 
     # -- scheduling ------------------------------------------------------------
 
+    def _shed_blown(self) -> None:
+        """SLO-aware queue shedding: drop waiting requests whose TTFT
+        deadline has already passed — prefilling them cannot meet the SLO,
+        so the capacity goes to requests that can still make theirs."""
+        if not any(r.deadline is not None for r in self.waiting):
+            return
+        now = self.clock()
+        keep = []
+        for r in self.waiting:
+            if r.deadline is not None and now > r.deadline:
+                self.shed_rids.append(r.rid)
+            else:
+                keep.append(r)
+        self.waiting = keep
+
     def _admit(self) -> list[EngineRequest]:
         """Move waiting requests into free slots while KV blocks remain."""
         admitted = []
         if not self.admitting:
             return admitted
+        self._shed_blown()
         free = self._free_slots()
         while self.waiting and free:
             req = self.waiting[0]
@@ -520,39 +627,59 @@ class ServingEngine:
                 self.tokens_out += 1
 
     def _advance_chunked(self) -> None:
-        """Run one prefill chunk for the oldest mid-prefill sequence.
+        """Spread this step's chunk-token budget over ALL mid-prefill
+        sequences.
 
-        One bounded chunk per engine step (Sarathi-style): the prefill->page
-        scatter is fused into the chunk forward, and the decode batch for
-        already-running sequences proceeds in the same step, so a long
-        prompt never stalls decoding.
+        One bounded chunk-token budget per engine step (Sarathi-style): the
+        prefill->page scatter is fused into each chunk forward, and the
+        decode batch for already-running sequences proceeds in the same
+        step, so a long prompt never stalls decoding.  The budget is split
+        evenly round-robin across every mid-prefill sequence (rotating the
+        start slot each step so leftover tokens don't always favor the same
+        sequence) instead of dedicating it all to the oldest — two long
+        prompts stream in concurrently rather than serializing head-of-line.
         """
         slots = sorted(s for s, r in self.active.items() if r.prefilling)
         if not slots:
             return
-        slot = slots[0]
-        r = self.active[slot]
-        toks_all = r.prefill_tokens
-        start = r.prefill_pos
-        C = self.prefill_chunk_tokens
-        n_valid = min(C, len(toks_all) - start)
-        cb = _pow2_bucket(n_valid, C)
-        buf = np.zeros((1, cb), np.int32)
-        buf[0, :n_valid] = toks_all[start:start + n_valid]
-        bs = self.cache.block_size
-        need = (start + n_valid + bs - 1) // bs
-        n_pages = _pow2_bucket(need, self.cache.max_blocks_per_seq)
-        table = self.cache.block_table_dev[slot:slot + 1, :n_pages]
-        logits, k, v = self._chunk(self.params, jnp.asarray(buf),
-                                   self.cache.k, self.cache.v, table,
-                                   jnp.int32(start), jnp.int32(n_valid))
-        self.cache.k, self.cache.v = k, v
-        self.prefill_tokens += n_valid
-        r.prefill_pos = start + n_valid
-        if r.prefill_pos >= len(toks_all):     # final chunk emits token 1
-            first = self._pick(logits)
-            r.generated.append(int(first[0]))
-            self.tokens_out += 1
+        rot = self._chunk_rr % len(slots)
+        self._chunk_rr += 1
+        order = slots[rot:] + slots[:rot]
+        budget = self.prefill_chunk_tokens
+        # floor the per-slot share at C/4: a wide mid-prefill set otherwise
+        # degenerates into many tiny per-slot forwards whose dispatch
+        # overhead eats the fused-chunk win — at most 4 streams advance per
+        # step, the rotation rotates who they are
+        floor = max(1, self.prefill_chunk_tokens // 4)
+        for idx, slot in enumerate(order):
+            if budget <= 0:
+                break
+            # even split over the slots still to be served this step —
+            # recomputed each iteration so budget a short prefill leaves on
+            # the table flows to the longer ones behind it
+            share = max(floor, budget // (len(order) - idx))
+            r = self.active[slot]
+            toks_all = r.prefill_tokens
+            start = r.prefill_pos
+            n_valid = min(share, budget, len(toks_all) - start)
+            cb = _pow2_bucket(n_valid, self.prefill_chunk_tokens)
+            buf = np.zeros((1, cb), np.int32)
+            buf[0, :n_valid] = toks_all[start:start + n_valid]
+            bs = self.cache.block_size
+            need = (start + n_valid + bs - 1) // bs
+            n_pages = _pow2_bucket(need, self.cache.max_blocks_per_seq)
+            table = self.cache.block_table_dev[slot:slot + 1, :n_pages]
+            logits, k, v = self._chunk(self.params, jnp.asarray(buf),
+                                       self.cache.k, self.cache.v, table,
+                                       jnp.int32(start), jnp.int32(n_valid))
+            self.cache.k, self.cache.v = k, v
+            self.prefill_tokens += n_valid
+            budget -= n_valid
+            r.prefill_pos = start + n_valid
+            if r.prefill_pos >= len(toks_all):   # final chunk emits token 1
+                first = self._pick(logits)
+                r.generated.append(int(first[0]))
+                self.tokens_out += 1
 
     def _pick(self, logits: jax.Array) -> np.ndarray:
         if self.greedy:
@@ -562,11 +689,46 @@ class ServingEngine:
 
     # -- decode paths ----------------------------------------------------------
 
-    def _run_decode(self, slots: list[int]) -> None:
-        """Device-resident paged decode over the given slots (gather-free)."""
+    def _safe_horizon(self, slots: list[int], event: bool) -> int:
+        """How many decode steps the next fused dispatch may take.
+
+        ``min(decode_horizon, min remaining max_new_tokens over the batch)``
+        — so no sequence overshoots its budget and retirement lands exactly
+        on a horizon boundary — collapsed to 1 whenever a per-step
+        scheduling event must interleave (``event``: a request was admitted
+        this step, or a chunked prefill advanced — either way a sequence
+        should join the decode batch next step, not a horizon later), then
+        floored to a power of two so the horizon adds only
+        O(log decode_horizon) compilations.  Any still-waiting request is
+        blocked until a retirement frees capacity, and retirements bound
+        the horizon already, so the queue itself never shrinks it.
+        """
+        H = self.decode_horizon
+        if H <= 1:
+            return 1
+        if event:
+            return 1
+        rem = min(self.active[s].max_new_tokens - len(self.active[s].generated)
+                  for s in slots)
+        H = min(H, rem)
+        return _pow2_floor(H) if H > 1 else 1
+
+    def _dispatch_decode(self, slots: list[int], horizon: int
+                         ) -> PendingDecode:
+        """Fire the fused decode loop over the given slots; no host sync.
+
+        Pre-extends page capacity for the whole horizon (against the
+        admission-time lifetime reservation, so allocation cannot fail for
+        in-budget growth) and advances the host ``seq_lens``; the device
+        mirror advances inside the loop.
+        """
         slots = sorted(slots)
-        for s in slots:                      # page capacity for the new token
-            self.cache.extend(s)
+        updates = []                     # page capacity for the whole horizon
+        for s in slots:
+            upd = self.cache.extend_for(s, horizon, sync_device=False)
+            if upd is not None:
+                updates.append(upd)
+        self.cache.apply_table_updates(updates)   # one scatter for the batch
         B = len(slots)
         bucket = _pow2_bucket(B, self.max_seqs)
         trash = self.cache.trash_slot
@@ -577,23 +739,34 @@ class ServingEngine:
         bs = self.cache.block_size
         need = (int(self.cache.seq_lens[slots].max()) + bs - 1) // bs
         n_pages = _pow2_bucket(need, self.cache.max_blocks_per_seq)
-        if self.greedy:
-            sub = self.key
-        else:
-            self.key, sub = jax.random.split(self.key)
+        step0 = self._sample_step
+        self._sample_step += horizon
+        self.horizon_counts[horizon] = self.horizon_counts.get(horizon, 0) + 1
+        self.last_horizon = horizon
         toks, k, v, lens_dev, ssm, conv = self._fused(
             self.params, self.cache.k, self.cache.v,
             self.cache.block_table_dev, self.cache.seq_lens_dev,
             self.cache.ssm, self.cache.conv,
-            jnp.asarray(slot_arr), jnp.asarray(last), sub, n_pages=n_pages)
+            jnp.asarray(slot_arr), jnp.asarray(last), self.key,
+            jnp.int32(step0), n_pages=n_pages, horizon=horizon)
         self.cache.k, self.cache.v = k, v
         self.cache.seq_lens_dev = lens_dev
         self.cache.ssm, self.cache.conv = ssm, conv
-        toks = np.asarray(toks)              # the one device->host transfer
-        for i, s in enumerate(slots):
+        return PendingDecode(slots, toks, horizon)
+
+    def _finish_decode(self, pending: PendingDecode) -> None:
+        """Sync a dispatched horizon: ONE [B, H] device→host transfer."""
+        toks = np.asarray(pending.tokens)
+        self.decode_syncs += 1
+        for i, s in enumerate(pending.slots):
             r = self.active[s]
-            r.generated.append(int(toks[i]))
-            self.tokens_out += 1
+            r.generated.extend(int(t) for t in toks[i, :pending.horizon])
+            self.tokens_out += pending.horizon
+
+    def _run_decode(self, slots: list[int], horizon: int = 1) -> None:
+        """Device-resident paged decode over the given slots (gather-free):
+        synchronous dispatch + sync."""
+        self._finish_decode(self._dispatch_decode(slots, horizon))
 
     def _run_decode_dense(self, slots: list[int]) -> None:
         """Legacy dense-gather decode (A/B baseline for bench_engine)."""
@@ -641,15 +814,24 @@ class ServingEngine:
 
     # -- main loop ---------------------------------------------------------------
 
-    def step(self) -> list[EngineRequest]:
-        """One scheduler iteration; returns requests finished this step.
+    def step_async(self) -> PendingDecode | None:
+        """The host half of one scheduler iteration: admission (with SLO
+        shedding), prefill, chunked-prefill advance, and the fused decode
+        *dispatch* — but NOT the decode sync.  Returns the pending decode
+        handle (None when nothing decoded); the caller must pass it to
+        ``finish_step``.  ``ClusterRuntime.step`` fires every replica's
+        ``step_async`` before finishing any of them, so no replica's
+        device→host sync blocks another replica's dispatch.
 
         Prefill and decode interleave: sequences that were already active
-        still emit their decode token on a step that admits new prompts
-        (newly admitted requests get their first token from prefill itself).
-        Prompts longer than ``prefill_chunk_tokens`` advance one fused
-        chunk per step instead of one-shot prefilling, so the decode batch
-        keeps emitting while a long context streams into its pages.
+        still emit decode tokens on a step that admits new prompts (newly
+        admitted requests get their first token from prefill itself).
+        Prompts longer than ``prefill_chunk_tokens`` advance by a round-
+        robin-shared chunk budget per step instead of one-shot prefilling,
+        so the decode batch keeps emitting while long contexts stream into
+        their pages.  With ``decode_horizon > 1`` the decode dispatch runs
+        up to that many device-resident steps (see ``_safe_horizon``);
+        ``self.steps`` counts scheduler iterations, not tokens.
         """
         self.steps += 1
         decode_slots = [s for s, r in self.active.items() if not r.prefilling]
@@ -659,14 +841,32 @@ class ServingEngine:
                    if chunk is None or len(r.prefill_tokens) <= chunk]
         if oneshot:
             self._run_prefill(oneshot)
+        # capture the chunk event BEFORE advancing: a prefill that completes
+        # this very step is still a per-step event (its sequence must join
+        # the decode batch next step, not a horizon later)
+        chunking = any(r.prefilling for r in self.active.values())
         if chunk is not None:
             self._advance_chunked()      # longer admissions, chunk by chunk
         if decode_slots:
             if self.decode_mode == "paged":
-                self._run_decode(decode_slots)
-            else:
-                self._run_decode_dense(decode_slots)
+                h = self._safe_horizon(decode_slots,
+                                       bool(admitted) or chunking)
+                return self._dispatch_decode(decode_slots, h)
+            self._run_decode_dense(decode_slots)
+        return None
+
+    def finish_step(self, pending: PendingDecode | None
+                    ) -> list[EngineRequest]:
+        """Sync a dispatched step (one device→host token transfer) and
+        retire finished requests."""
+        if pending is not None:
+            self._finish_decode(pending)
         return self._retire()
+
+    def step(self) -> list[EngineRequest]:
+        """One synchronous scheduler iteration; returns requests finished
+        this step (``finish_step(step_async())``)."""
+        return self.finish_step(self.step_async())
 
     def run_to_completion(self, max_steps: int = 100_000
                           ) -> list[EngineRequest]:

@@ -248,36 +248,75 @@ class PagedKVCache:
         return self.n_free_blocks >= self._blocks(prompt_len) + headroom_blocks
 
     def extend(self, slot: int) -> None:
-        """Ensure capacity for one more token.
+        """Ensure capacity for one more token (``extend_for(slot, 1)``)."""
+        self.extend_for(slot, 1)
 
-        The host length advances here; the device ``seq_lens_dev`` row
-        advances inside the fused decode step (one scatter-add for the whole
-        batch), keeping the two in lockstep without per-sequence transfers.
+    def extend_for(self, slot: int, n_tokens: int,
+                   sync_device: bool = True) -> tuple | None:
+        """Ensure page capacity for the next ``n_tokens`` decode tokens.
+
+        The horizon pre-extend: before a fused multi-step decode dispatch,
+        every block the loop will write through the block table (positions
+        ``len .. len + n_tokens - 1``) is allocated here in one host pass,
+        so the device loop never needs host allocation mid-horizon.  The
+        host length advances here (the dispatch is committed — a horizon
+        always completes); the device ``seq_lens_dev`` row advances inside
+        the fused loop itself, keeping the two in lockstep without
+        per-sequence transfers.
+
+        ``sync_device=True`` scatters the new table entries to the device
+        mirror immediately; with ``False`` the pending update
+        ``(slot, first_col, new_blocks)`` is returned instead (or None),
+        so a batch caller can fuse all slots' syncs into ONE device scatter
+        via ``apply_table_updates``.
         """
-        new_len = int(self.seq_lens[slot]) + 1
+        new_len = int(self.seq_lens[slot]) + n_tokens
         n_have = len(self.seq_blocks[slot])
-        if new_len > n_have * self.block_size:
-            if n_have >= self.max_blocks_per_seq:
+        need = (new_len + self.block_size - 1) // self.block_size
+        update = None
+        if need > n_have:
+            if need > self.max_blocks_per_seq:
                 raise MemoryError("sequence exceeds max_blocks_per_seq")
-            if n_have >= self.seq_reserved.get(slot, 0):
+            short = need - max(self.seq_reserved.get(slot, 0), n_have)
+            if short > 0:
                 # growth beyond the admission reservation (legacy
                 # prompt-only admits): extend the reservation, but never
                 # into another view's quota
                 if (self.quota is not None
-                        and self.reserved_blocks >= self.quota):
+                        and self.reserved_blocks + short > self.quota):
                     raise MemoryError("replica KV quota exceeded")
-                if self.pool.reserved >= self.pool.num_blocks:
+                if self.pool.reserved + short > self.pool.num_blocks:
                     raise MemoryError("KV pool fully reserved")
-                self.reserved_blocks += 1
-                self.pool.reserved += 1
-                self.seq_reserved[slot] = n_have + 1
-            b = self.allocator.alloc(1)[0]
-            self.used_blocks += 1
-            self.seq_blocks[slot].append(b)
-            self.block_table[slot, n_have] = b
-            # incremental device sync: single-element scatter on page crossing
-            self.block_table_dev = self.block_table_dev.at[slot, n_have].set(b)
+                self.reserved_blocks += short
+                self.pool.reserved += short
+                self.seq_reserved[slot] = need
+            grow = need - n_have
+            new_blocks = self.allocator.alloc(grow)
+            self.used_blocks += grow
+            self.seq_blocks[slot].extend(new_blocks)
+            self.block_table[slot, n_have:need] = new_blocks
+            if sync_device:
+                # incremental sync: one row-slice scatter per page crossing
+                self.block_table_dev = self.block_table_dev.at[
+                    slot, n_have:need].set(jnp.asarray(new_blocks, jnp.int32))
+            else:
+                update = (slot, n_have, new_blocks)
         self.seq_lens[slot] = new_len
+        return update
+
+    def apply_table_updates(self, updates: list[tuple]) -> None:
+        """Fuse deferred ``extend_for`` device syncs into one scatter: the
+        whole decode batch's page crossings cost a single dispatch."""
+        if not updates:
+            return
+        rows, cols, vals = [], [], []
+        for slot, start, blocks in updates:
+            rows.extend([slot] * len(blocks))
+            cols.extend(range(start, start + len(blocks)))
+            vals.extend(blocks)
+        self.block_table_dev = self.block_table_dev.at[
+            jnp.asarray(rows, jnp.int32), jnp.asarray(cols, jnp.int32)].set(
+            jnp.asarray(vals, jnp.int32))
 
     def release_slot(self, slot: int) -> None:
         blocks = self.seq_blocks.pop(slot, [])

@@ -1,0 +1,339 @@
+"""Horizon-batched device decode + async dispatch + SLO shedding.
+
+Covers the horizon contract end to end:
+  * token parity of the fused multi-step loop vs per-step paged decode,
+    greedy AND sampled-with-fixed-key (the per-step key folding makes the
+    sampled stream horizon-invariant);
+  * horizon truncation at retire / admit / chunked-prefill boundaries and
+    the power-of-two compilation bucketing;
+  * one device→host transfer per horizon (``decode_syncs``);
+  * a mid-horizon deployment switch whose migration still recomputes zero
+    prefill tokens;
+  * the round-robin chunked-prefill budget (no head-of-line serialization);
+  * SLO-aware queue shedding on the engine and its cluster-level reporting.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, get_smoke_config
+from repro.core.costmodel import CostModel
+from repro.core.orchestrator import Orchestrator, OrchestratorConfig
+from repro.core.types import (ClusterSpec, H100_SPEC, ReplicaConfig,
+                              WorkloadType)
+from repro.models import init_params
+from repro.serving.cluster import ClusterRuntime
+from repro.serving.engine import ServingEngine
+
+
+@pytest.fixture(scope="module")
+def cfg_params():
+    cfg = get_smoke_config("yi-9b")
+    params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    return cfg, params
+
+
+def _jobs(cfg, spec, seed=1):
+    rng = np.random.RandomState(seed)
+    return [(rng.randint(0, cfg.vocab_size, n).astype(np.int32), new)
+            for n, new in spec]
+
+
+def _run(cfg, params, jobs, horizon, *, greedy=True, max_seqs=2, **kw):
+    eng = ServingEngine(cfg, params, num_blocks=64, block_size=8,
+                        max_seqs=max_seqs, greedy=greedy,
+                        decode_horizon=horizon, **kw)
+    for i, (p, n) in enumerate(jobs):
+        eng.submit(i, p, n)
+    return {r.rid: r.generated for r in eng.run_to_completion()}, eng
+
+
+# ---------------------------------------------------------------------------
+# Token parity: the fused horizon loop is invisible in the token stream.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("horizon", [2, 8, 16])
+def test_horizon_matches_per_step_greedy(cfg_params, horizon):
+    """Mixed lengths + staggered retirement: every horizon size produces
+    exactly the per-step token stream under greedy decoding."""
+    cfg, params = cfg_params
+    jobs = _jobs(cfg, ((8, 9), (8, 17), (12, 5)))
+    got_1, e1 = _run(cfg, params, jobs, 1)
+    got_h, eh = _run(cfg, params, jobs, horizon)
+    assert got_h == got_1
+    # the horizon engine really batched steps: fewer syncs than token-steps
+    assert eh.decode_syncs < e1.decode_syncs
+
+
+def test_horizon_matches_per_step_sampled_fixed_key(cfg_params):
+    """Per-step key folding (sampling.step_key) makes the SAMPLED stream
+    horizon-invariant too: decode step t draws fold_in(key, t) whether it
+    runs alone or inside a fused horizon."""
+    cfg, params = cfg_params
+    jobs = _jobs(cfg, ((8, 9), (8, 17), (12, 5)))
+    got_1, _ = _run(cfg, params, jobs, 1, greedy=False)
+    got_8, _ = _run(cfg, params, jobs, 8, greedy=False)
+    assert got_8 == got_1
+
+
+def test_horizon_parity_local_window_arch(cfg_params):
+    """gemma2-style local/global alternation through the fused loop."""
+    cfg = get_smoke_config("gemma2-2b")
+    params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    jobs = _jobs(cfg, ((8, 6), (8, 11)), seed=2)
+    got_1, _ = _run(cfg, params, jobs, 1)
+    got_8, _ = _run(cfg, params, jobs, 8)
+    assert got_8 == got_1
+
+
+def test_horizon_parity_ssm_arch():
+    """The SSM state row round-trips through the scan carry (mamba2)."""
+    cfg = get_smoke_config("mamba2-370m")
+    params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    jobs = _jobs(cfg, ((8, 6), (8, 11)), seed=2)
+    got_1, _ = _run(cfg, params, jobs, 1)
+    got_8, _ = _run(cfg, params, jobs, 8)
+    assert got_8 == got_1
+
+
+# ---------------------------------------------------------------------------
+# Horizon scheduling: truncation at retire / admit / chunk boundaries.
+# ---------------------------------------------------------------------------
+
+
+def test_horizon_truncates_at_retire_boundary(cfg_params):
+    """min remaining max_new_tokens bounds the horizon (pow2-floored), so a
+    sequence never overshoots its budget mid-horizon."""
+    cfg, params = cfg_params
+    jobs = _jobs(cfg, ((8, 4), (8, 20)))      # retire at token 4 vs 20
+    got, eng = _run(cfg, params, jobs, 16, max_seqs=2)
+    assert {r: len(g) for r, g in got.items()} == {0: 4, 1: 20}
+    # first dispatch: both seqs active, min remaining = 3 (prefill emitted
+    # token 1) -> pow2 floor 2; never a horizon beyond the remaining budget
+    hist = eng.horizon_counts
+    assert max(hist) <= 16
+    assert eng.last_horizon >= 1
+    # all dispatched horizons are powers of two (compile-count bound)
+    assert all(h & (h - 1) == 0 for h in hist)
+    # the long tail after seq 0 retired ran real multi-step horizons
+    assert max(hist) >= 8
+
+
+def test_horizon_collapses_on_admission(cfg_params):
+    """A step that admits a prompt dispatches horizon 1, so the admitted
+    sequence joins the decode batch on the very next step (no TPOT cliff
+    for late arrivals)."""
+    cfg, params = cfg_params
+
+    def drive(horizon):
+        eng = ServingEngine(cfg, params, num_blocks=64, block_size=8,
+                            max_seqs=4, decode_horizon=horizon)
+        rng = np.random.RandomState(3)
+        done = []
+        eng.submit(0, rng.randint(0, cfg.vocab_size, 8).astype(np.int32), 12)
+        done += eng.step()                     # prefill request 0
+        done += eng.step()                     # pure decode
+        h_decode = eng.last_horizon
+        eng.submit(1, rng.randint(0, cfg.vocab_size, 8).astype(np.int32), 12)
+        done += eng.step()                     # admits rid 1
+        h_admit = eng.last_horizon
+        done += eng.run_to_completion()
+        return ({r.rid: r.generated for r in done}, h_decode, h_admit)
+
+    got_h, h_decode, h_admit = drive(8)
+    assert h_decode > 1                        # pure-decode step batched
+    assert h_admit == 1                        # admit step collapsed it
+    got_1, _, _ = drive(1)
+    assert got_h == got_1
+
+
+def test_horizon_collapses_during_chunked_prefill(cfg_params):
+    """While a long prompt streams in chunk by chunk, decode must keep
+    emitting one token per step (the Sarathi property), so the horizon
+    pins to 1 until the prefill completes."""
+    cfg, params = cfg_params
+    eng = ServingEngine(cfg, params, num_blocks=128, block_size=8,
+                        max_seqs=2, decode_horizon=8,
+                        prefill_chunk_tokens=8)
+    rng = np.random.RandomState(4)
+    done = []
+    eng.submit(0, rng.randint(0, cfg.vocab_size, 8).astype(np.int32), 24)
+    done += eng.step()                         # one-shot prefill rid 0
+    eng.submit(1, rng.randint(0, cfg.vocab_size, 32).astype(np.int32), 4)
+    saw_chunk_step = False
+    while any(r.prefilling for r in eng.active.values()) or eng.waiting:
+        t0 = {s: len(r.generated) for s, r in eng.active.items()
+              if not r.prefilling}
+        done += eng.step()
+        assert eng.last_horizon == 1          # chunk in flight: per-step
+        for s, n in t0.items():
+            if s in eng.active:
+                assert len(eng.active[s].generated) == n + 1
+        saw_chunk_step = True
+    assert saw_chunk_step
+    done += eng.step()
+    assert eng.last_horizon > 1               # prefill done: horizon reopens
+    done += eng.run_to_completion()
+    got = {r.rid: r.generated for r in done}
+
+    ref = ServingEngine(cfg, params, num_blocks=128, block_size=8,
+                        max_seqs=2, prefill_chunk_tokens=8)
+    rng = np.random.RandomState(4)
+    ref.submit(0, rng.randint(0, cfg.vocab_size, 8).astype(np.int32), 24)
+    ref.step()
+    ref.submit(1, rng.randint(0, cfg.vocab_size, 32).astype(np.int32), 4)
+    expected = {r.rid: r.generated for r in ref.run_to_completion()}
+    assert got == expected
+
+
+def test_one_transfer_per_horizon(cfg_params):
+    """decode_syncs counts device→host transfers: one per horizon, not one
+    per token — H=8 needs ~8x fewer syncs than H=1 on a long generation."""
+    cfg, params = cfg_params
+    jobs = _jobs(cfg, ((8, 33), (8, 33)))
+    _, e1 = _run(cfg, params, jobs, 1)
+    _, e8 = _run(cfg, params, jobs, 8)
+    # 32 decode token-steps: H=1 -> 32 syncs; H=8 -> 8,8,8,8 = 4 syncs
+    assert e1.decode_syncs == 32
+    assert e8.decode_syncs == 4
+    assert e8.horizon_counts == {8: 4}
+
+
+# ---------------------------------------------------------------------------
+# Mid-horizon deployment switch: still zero recompute, still token-exact.
+# ---------------------------------------------------------------------------
+
+
+def test_mid_horizon_switch_zero_recompute(cfg_params):
+    """A deployment switch landing between horizon dispatches (sequences
+    mid-generation, host/device lens advanced by whole horizons) migrates
+    by page handoff: zero prefill tokens recomputed, tokens identical to
+    an uninterrupted engine."""
+    cfg, params = cfg_params
+    cm = CostModel(get_config("opt-30b").profile(), hw=H100_SPEC)
+    orch = Orchestrator(cm, ClusterSpec(6, hw=H100_SPEC),
+                        OrchestratorConfig(search_patience=10))
+    arch = [WorkloadType(1275, 287), WorkloadType(139, 133),
+            WorkloadType(1181, 1824), WorkloadType(282, 1121)]
+    rt = ClusterRuntime(cfg, params, orch, blocks_per_chip=16,
+                        seqs_per_chip=1, block_size=8, drain_steps=0,
+                        decode_horizon=4)
+    rng = np.random.RandomState(0)
+    jobs = {}
+    rid = 0
+    prompt_tokens = 0
+    for rates in ([5, 300, 2, 3], [40, 10, 60, 40]):
+        plan = orch.plan_span([a.with_rate(float(r))
+                               for a, r in zip(arch, rates)])
+        rt.apply_plan(plan)
+        for i in range(6):
+            t = int(rng.randint(0, 4))
+            prompt = rng.randint(0, cfg.vocab_size, 6 + 2 * t).astype(np.int32)
+            jobs[rid] = (prompt, 8 + t)
+            rt.submit(rid, prompt, 8 + t, type_id=t)
+            prompt_tokens += len(prompt)
+            rid += 1
+        for _ in range(4):
+            rt.step()
+        rt.finish_span()
+    rt.run_until_idle()
+
+    assert len(rt.results) == rid
+    # zero-recompute: cluster-wide prefill forwards == admitted prompt tokens
+    assert rt.total_prefill_tokens == prompt_tokens
+    ref = ServingEngine(cfg, params, num_blocks=256, block_size=8, max_seqs=8)
+    for r, (prompt, n) in jobs.items():
+        ref.submit(r, prompt, n)
+    expected = {r.rid: r.generated for r in ref.run_to_completion()}
+    for r in range(rid):
+        assert rt.results[r].generated == expected[r], f"rid {r} diverged"
+
+
+# ---------------------------------------------------------------------------
+# Round-robin chunked prefill: no head-of-line serialization.
+# ---------------------------------------------------------------------------
+
+
+def test_chunked_prefill_round_robin_no_hol(cfg_params):
+    """Two long prompts admitted together both make progress every step —
+    the per-step chunk budget is split across them instead of dedicating
+    it all to the oldest."""
+    cfg, params = cfg_params
+    eng = ServingEngine(cfg, params, num_blocks=128, block_size=8,
+                        max_seqs=2, prefill_chunk_tokens=16)
+    rng = np.random.RandomState(5)
+    p0 = rng.randint(0, cfg.vocab_size, 64).astype(np.int32)
+    p1 = rng.randint(0, cfg.vocab_size, 64).astype(np.int32)
+    eng.submit(0, p0, 3)
+    eng.submit(1, p1, 3)
+    eng.step()
+    by_rid = {r.rid: r for r in eng.active.values()}
+    # after one step BOTH are mid-prefill and BOTH advanced (old behavior:
+    # rid 0 got the whole budget, rid 1 sat at 0)
+    assert 0 < by_rid[0].prefill_pos < 64
+    assert 0 < by_rid[1].prefill_pos < 64
+    done = []
+    while any(r.prefilling for r in eng.active.values()):
+        done += eng.step()
+        pos = sorted(r.prefill_pos for r in eng.active.values())
+        assert pos[-1] - pos[0] <= eng.prefill_chunk_tokens, (
+            "round-robin budget drifted into head-of-line behavior")
+    got = {r.rid: r.generated for r in done + eng.run_to_completion()}
+
+    # parity: chunk scheduling must not change the tokens
+    ref = ServingEngine(cfg, params, num_blocks=128, block_size=8, max_seqs=2)
+    ref.submit(0, p0, 3)
+    ref.submit(1, p1, 3)
+    expected = {r.rid: r.generated for r in ref.run_to_completion()}
+    assert got == expected
+
+
+# ---------------------------------------------------------------------------
+# SLO-aware queue shedding.
+# ---------------------------------------------------------------------------
+
+
+def test_engine_sheds_blown_ttft_before_prefill(cfg_params):
+    cfg, params = cfg_params
+    eng = ServingEngine(cfg, params, num_blocks=64, block_size=8, max_seqs=2)
+    now = [0.0]
+    eng.clock = lambda: now[0]
+    rng = np.random.RandomState(6)
+    eng.submit(0, rng.randint(0, cfg.vocab_size, 8).astype(np.int32), 4,
+               ttft_deadline=10.0)
+    eng.submit(1, rng.randint(0, cfg.vocab_size, 8).astype(np.int32), 4,
+               ttft_deadline=0.5)
+    now[0] = 1.0                       # rid 1's TTFT budget is already blown
+    finished = eng.run_to_completion()
+    assert sorted(r.rid for r in finished) == [0]
+    assert eng.shed_rids == [1]
+    assert eng.load_stats()["shed"] == 1
+    assert eng.prefill_tokens == 8     # the shed request never prefilled
+    assert eng.cache.allocator.n_free == 64
+
+
+def test_cluster_reports_shed_in_span(cfg_params):
+    cfg, params = cfg_params
+    rt = ClusterRuntime(cfg, params, total_chips=2, blocks_per_chip=32,
+                        seqs_per_chip=2, block_size=8)
+
+    class _Plan:
+        deployment = type("D", (), {"replicas": [ReplicaConfig(2)]})()
+        fractions = [[1.0]]
+
+    rt.apply_plan(_Plan())
+    now = [0.0]
+    rt.replicas[0].engine.clock = lambda: now[0]
+    rng = np.random.RandomState(7)
+    rt.submit(0, rng.randint(0, cfg.vocab_size, 8).astype(np.int32), 4,
+              ttft_deadline=0.25)
+    now[0] = 1.0
+    rt.run_until_idle()
+    report = rt.finish_span()
+    assert report.shed == 1
+    assert rt.total_shed == 1
+    assert rt.load_stats()[0]["shed"] == 1
+    # the next span starts from a clean mark
+    assert rt.finish_span().shed == 0
