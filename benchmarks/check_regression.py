@@ -1,0 +1,173 @@
+"""Bench regression gate: freshly measured JSONs vs the committed baselines.
+
+CI used to fail benchmarks only when they raised; this script turns the
+numbers themselves into a gate.  The workflow stashes the committed
+``BENCH_engine.json`` / ``BENCH_switch.json`` before the bench steps
+overwrite them, then runs::
+
+    python benchmarks/check_regression.py \
+        --baseline-dir .bench-baseline --fresh-dir .
+
+Two kinds of checks, because CI boxes are not the box that produced the
+committed numbers:
+
+  * **machine-independent ratios** (hard gates): paged decode must beat the
+    dense-gather path by a wide margin, the H=8 horizon must keep its >= 2x
+    over per-step decode, page handoff must stay >= 5x cheaper than
+    re-prefill, and the zero-recompute invariants (recompute_tokens,
+    restore-path counts) must match the baseline *exactly* — these ratios
+    survive any change of hardware, so a violation is a real regression.
+  * **absolute numbers vs baseline**, with a wide tolerance band
+    (``--tolerance``, default: fresh throughput must reach 20% of baseline;
+    ``--stall-tolerance``, default: fresh stalls must stay under 5x
+    baseline).  The band absorbs machine variance while still catching
+    order-of-magnitude cliffs (a path falling off its jitted fast path).
+
+Exit code 1 lists every violated gate; 0 prints the compared metrics.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+ENGINE_JSON = "BENCH_engine.json"
+SWITCH_JSON = "BENCH_switch.json"
+
+# machine-independent ratio floors (hard gates)
+PAGED_VS_DENSE_MIN = 10.0       # committed: ~80-250x on CPU smoke
+HORIZON_H8_MIN = 2.0            # CI-asserted in bench_engine too
+HANDOFF_VS_REPREFILL_MIN = 5.0  # CI-asserted in bench_switch too
+
+
+def _load(d: pathlib.Path, name: str) -> dict:
+    p = d / name
+    if not p.exists():
+        raise SystemExit(f"missing {p} — run the benchmark first")
+    return json.loads(p.read_text())
+
+
+def _index(rows: list[dict], *keys: str) -> dict[tuple, dict]:
+    return {tuple(r[k] for k in keys): r for r in rows}
+
+
+def check_engine(base: dict, fresh: dict, tol: float) -> list[str]:
+    bad: list[str] = []
+    b_rows = _index(base["results"], "mode", "batch")
+    f_rows = _index(fresh["results"], "mode", "batch")
+    for key, br in sorted(b_rows.items()):
+        fr = f_rows.get(key)
+        if fr is None:
+            # sweep-scope difference (e.g. baseline from a non---fast run):
+            # gate only the rows both runs produced
+            print(f"engine/{key[0]}/b{key[1]}: not in fresh sweep, skipped")
+            continue
+        floor = tol * br["tokens_per_sec"]
+        ok = fr["tokens_per_sec"] >= floor
+        print(f"engine/{key[0]}/b{key[1]}: {fr['tokens_per_sec']:.1f} tok/s "
+              f"(baseline {br['tokens_per_sec']:.1f}, floor {floor:.1f}) "
+              f"{'ok' if ok else 'REGRESSED'}")
+        if not ok:
+            bad.append(f"engine {key}: {fr['tokens_per_sec']:.1f} tok/s "
+                       f"< {tol:.2f}x baseline {br['tokens_per_sec']:.1f}")
+    # paged vs dense: a machine-independent ratio within the fresh run
+    for (mode, batch), fr in sorted(f_rows.items()):
+        if mode != "paged" or ("dense", batch) not in f_rows:
+            continue
+        gain = fr["tokens_per_sec"] / max(
+            f_rows[("dense", batch)]["tokens_per_sec"], 1e-9)
+        print(f"engine/gain/b{batch}: paged {gain:.1f}x dense")
+        if gain < PAGED_VS_DENSE_MIN:
+            bad.append(f"engine b{batch}: paged only {gain:.1f}x dense "
+                       f"(needs >= {PAGED_VS_DENSE_MIN}x)")
+
+    bh = _index(base["horizon"]["results"], "horizon")
+    fh = _index(fresh["horizon"]["results"], "horizon")
+    for key, br in sorted(bh.items()):
+        fr = fh.get(key)
+        if fr is None:
+            print(f"engine/horizon/h{key[0]}: not in fresh sweep, skipped")
+            continue
+        if fr["syncs"] != br["syncs"]:
+            bad.append(f"horizon H={key[0]}: {fr['syncs']} device→host "
+                       f"transfers, baseline {br['syncs']} (one per horizon)")
+        floor = tol * br["tokens_per_sec"]
+        if fr["tokens_per_sec"] < floor:
+            bad.append(f"horizon H={key[0]}: {fr['tokens_per_sec']:.1f} "
+                       f"tok/s < {tol:.2f}x baseline "
+                       f"{br['tokens_per_sec']:.1f}")
+    if (1,) in fh and (8,) in fh:
+        gain = (fh[(8,)]["tokens_per_sec"]
+                / max(fh[(1,)]["tokens_per_sec"], 1e-9))
+        print(f"engine/horizon/gain_h8: {gain:.2f}x")
+        if gain < HORIZON_H8_MIN:
+            bad.append(f"horizon: H=8 only {gain:.2f}x per-step "
+                       f"(needs >= {HORIZON_H8_MIN}x)")
+    return bad
+
+
+def check_switch(base: dict, fresh: dict, stall_tol: float) -> list[str]:
+    bad: list[str] = []
+    b_rows = _index(base["results"], "mode")
+    f_rows = _index(fresh["results"], "mode")
+    for key, br in sorted(b_rows.items()):
+        fr = f_rows.get(key)
+        if fr is None:
+            bad.append(f"switch {key[0]}: restore path missing from fresh "
+                       f"run")
+            continue
+        ceil = stall_tol * br["stall_ms"]
+        ok = fr["stall_ms"] <= ceil
+        print(f"switch/{key[0]}: stall {fr['stall_ms']:.2f}ms "
+              f"(baseline {br['stall_ms']:.2f}, ceiling {ceil:.2f}) "
+              f"{'ok' if ok else 'REGRESSED'}")
+        if not ok:
+            bad.append(f"switch {key[0]}: stall {fr['stall_ms']:.2f}ms "
+                       f"> {stall_tol:.1f}x baseline {br['stall_ms']:.2f}ms")
+        # restore-path structure is deterministic: must match exactly
+        for field in ("handoff", "copied", "reprefilled", "pages_handoff",
+                      "pages_copied", "recompute_tokens"):
+            if fr.get(field) != br.get(field):
+                bad.append(f"switch {key[0]}: {field} = {fr.get(field)} "
+                           f"(baseline {br.get(field)}) — restore path "
+                           f"changed")
+    x = fresh.get("handoff_vs_reprefill_x", 0.0)
+    print(f"switch/handoff_vs_reprefill: {x:.2f}x")
+    if x < HANDOFF_VS_REPREFILL_MIN:
+        bad.append(f"switch: handoff only {x:.2f}x cheaper than re-prefill "
+                   f"(needs >= {HANDOFF_VS_REPREFILL_MIN}x)")
+    return bad
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline-dir", required=True, type=pathlib.Path,
+                    help="directory holding the committed BENCH_*.json "
+                         "(stash them before the bench steps overwrite)")
+    ap.add_argument("--fresh-dir", default=".", type=pathlib.Path,
+                    help="directory the benchmarks just wrote into")
+    ap.add_argument("--tolerance", type=float, default=0.2,
+                    help="fresh throughput must reach this fraction of the "
+                         "committed baseline (wide: CI boxes differ)")
+    ap.add_argument("--stall-tolerance", type=float, default=5.0,
+                    help="fresh switch stalls must stay under this multiple "
+                         "of the committed baseline")
+    args = ap.parse_args(argv)
+
+    bad = check_engine(_load(args.baseline_dir, ENGINE_JSON),
+                       _load(args.fresh_dir, ENGINE_JSON), args.tolerance)
+    bad += check_switch(_load(args.baseline_dir, SWITCH_JSON),
+                        _load(args.fresh_dir, SWITCH_JSON),
+                        args.stall_tolerance)
+    if bad:
+        print("\nBENCH REGRESSIONS:", file=sys.stderr)
+        for b in bad:
+            print(f"  - {b}", file=sys.stderr)
+        return 1
+    print("\nall bench gates passed")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

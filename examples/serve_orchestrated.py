@@ -76,8 +76,10 @@ def run_real(args) -> None:
 
     outcomes, runtime = run_real_spans(
         model=args.model, chips=args.chips, n_spans=args.spans,
-        requests_per_span=args.requests_per_span, seed=args.seed)
-    print(f"{runtime.cfg.name} (real engines) planning as {args.model} on "
+        requests_per_span=args.requests_per_span, seed=args.seed,
+        shard=args.shard)
+    mode = "sharded engines" if args.shard else "real engines"
+    print(f"{runtime.cfg.name} ({mode}) planning as {args.model} on "
           f"{args.chips} chips")
     for o in outcomes:
         switch, report = o.switch, o.report
@@ -114,6 +116,11 @@ def main(argv=None):
     ap.add_argument("--model", default="opt-30b")
     ap.add_argument("--real", action="store_true",
                     help="execute plans on real engines (smoke-scale model)")
+    ap.add_argument("--shard", action="store_true",
+                    help="with --real: execute each replica's (tp, pp) on a "
+                         "per-replica device sub-mesh (needs >= --chips jax "
+                         "devices, e.g. XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=8)")
     ap.add_argument("--requests-per-span", type=int, default=6)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)

@@ -21,6 +21,9 @@ VARIANTS = {
         "nosp": dict(extra_rules={"act_seq": None}),
         "expert_tp": dict(cfg_overrides={"expert_sharding": "tp"}),
         "nosp_noremat": dict(remat=False, extra_rules={"act_seq": None}),
+        # round 2 (was a separate dict entry; merged — completed variants
+        # are skipped via their recorded JSONs, so re-listing is free)
+        "nosp_v2_nofsdp": dict(fsdp=False, extra_rules={"act_seq": None}),
     },
     # B) qwen decode_32k: collective-bound (4.0s vs 1.5s memory) from FSDP
     #    weight gathers; replicate the small batch + shard KV seq 2D instead
@@ -34,9 +37,6 @@ VARIANTS = {
         # FSDP row-sharding -> no per-step weight all-gathers at all
         "nofsdp_f8kv": dict(fsdp=False, cache_dtype="f8"),
         "f8kv": dict(cache_dtype="f8"),
-    },
-    ("olmoe-1b-7b", "train_4k"): {
-        "nosp_v2_nofsdp": dict(fsdp=False, extra_rules={"act_seq": None}),
     },
     # C) gemma2 prefill_32k: worst memory term (29.2s) from replicated attn
     ("gemma2-2b", "prefill_32k"): {

@@ -10,7 +10,7 @@ import sys
 
 sys.path.insert(0, "src")
 sys.path.insert(0, ".")
-from benchmarks.bench_roofline import model_flops, roofline_row  # noqa: E402
+from benchmarks.bench_roofline import roofline_row  # noqa: E402
 from repro.configs import ASSIGNED_ARCHS, get_config              # noqa: E402
 from repro.launch.shapes import SHAPES, applicable                 # noqa: E402
 

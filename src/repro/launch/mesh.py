@@ -17,3 +17,23 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_small_mesh(devices: int = 8, model: int = 2):
     """CPU-test mesh (requires XLA_FLAGS host device count >= devices)."""
     return jax.make_mesh((devices // model, model), ("data", "model"))
+
+
+def make_replica_mesh(devices, tp: int, pp: int = 1):
+    """Mesh for ONE serving replica: shape (pp, tp), axes ("pipe", "model").
+
+    ``devices`` is this replica's slice of the device set (len == tp * pp);
+    the cluster runtime carves ``jax.devices()`` into per-replica slices so
+    heterogeneous deployments place each replica on its own sub-mesh.
+    Tensor parallelism shards heads / d_ff / vocab over ``model`` (the
+    serving ``ShardingPlan`` rules); pipeline parallelism shards the
+    layer-stacked parameter (and paged-pool) leading axis over ``pipe``.
+    """
+    import numpy as np
+
+    devices = list(devices)
+    if len(devices) != tp * pp:
+        raise ValueError(
+            f"replica mesh needs tp*pp={tp * pp} devices, got {len(devices)}")
+    return jax.sharding.Mesh(
+        np.asarray(devices, dtype=object).reshape(pp, tp), ("pipe", "model"))

@@ -50,6 +50,10 @@ def resolve_attn_mode(cfg: ModelConfig, tp: int) -> str:
         return "replicate"
     if mode == "heads" and not _divisible(cfg.n_q_heads, tp):
         return "pad" if pad_heads(cfg, tp) else "replicate"
+    if mode == "pad" and pad_heads(cfg, tp) is None:
+        # no function-preserving padding below the 4x bound: an explicit
+        # "pad" must degrade too, or the plan would shard unpadded heads
+        return "replicate"
     return mode
 
 
@@ -62,10 +66,12 @@ def pad_heads(cfg: ModelConfig, tp: int) -> tuple[int, int] | None:
     q, kv = cfg.n_q_heads, cfg.n_kv_heads
     if q == kv:
         qp = ((q + tp - 1) // tp) * tp
+        if qp > 4 * q:
+            return None     # tp so large the pad would exceed the 4x bound
         return (qp, qp)
     g = q // kv
     gp = g
-    while gp <= 4 * g + tp:
+    while kv * gp <= 4 * q:      # same 4x bound as the MHA branch
         if (kv * gp) % tp == 0:
             return (kv * gp, kv)
         gp += 1
@@ -85,9 +91,16 @@ def padded_config(cfg: ModelConfig, tp: int) -> ModelConfig:
 
 
 def make_plan(cfg: ModelConfig, shape_kind: str, multi_pod: bool,
-              global_batch: int, tp: int = 16, fsdp: bool | None = None
-              ) -> tuple[ShardingPlan, ModelConfig]:
-    """Returns (plan, possibly-padded config)."""
+              global_batch: int, tp: int = 16, fsdp: bool | None = None,
+              pp: int = 1) -> tuple[ShardingPlan, ModelConfig]:
+    """Returns (plan, possibly-padded config).
+
+    ``shape_kind="serve"`` is the paged serving-replica mode: KV pools are
+    head-sharded over ``model`` (never sequence-sharded — pages are the
+    storage unit), batch stays host-scheduled (unsharded), and ``pp > 1``
+    shards the layer-stacked parameter/pool leading axis over ``pipe``
+    (see ``launch.mesh.make_replica_mesh``).
+    """
     batch_axes = ("pod", "data") if multi_pod else ("data",)
     attn_mode = resolve_attn_mode(cfg, tp)
     run_cfg = padded_config(cfg, tp) if attn_mode == "pad" else cfg
@@ -128,7 +141,18 @@ def make_plan(cfg: ModelConfig, shape_kind: str, multi_pod: bool,
         "act_seq": ("model" if shape_kind == "train" and cfg.seq_parallel
                     else None),
         "fsdp": "data" if fsdp else None,
+        # layer-stacked leading axis of params / paged pools (pipeline
+        # parallelism inside a serving replica); an indivisible layer count
+        # replicates across `pipe` instead of failing placement
+        "layers": ("pipe" if pp > 1 and cfg.n_layers % pp == 0 else None),
     }
+    if shape_kind == "serve":
+        # serving replica: batch is host-scheduled (decode batches are tiny
+        # and padded to buckets), KV pools shard by head, never by sequence
+        rules["batch"] = None
+        rules["moe_groups"] = None
+        rules["fsdp"] = None
+        return ShardingPlan(rules, False, attn_mode, tp), run_cfg
     if shape_kind == "decode":
         if global_batch == 1:
             # long-context single sequence: shard the KV sequence everywhere
@@ -149,9 +173,10 @@ def param_pspecs(cfg: ModelConfig, plan: ShardingPlan):
     """Pytree of PartitionSpec mirroring init_params(cfg)."""
     r = plan.rules
     row = r["fsdp"]   # None or "data"
+    layers = r.get("layers")   # None, or "pipe" for pp-sharded replicas
 
     def blocks(spec: P) -> P:
-        return P(None, *spec)  # layer-stacked leading dim
+        return P(layers, *spec)  # layer-stacked leading dim
 
     b: dict = {"ln1": blocks(P(None))}
     if cfg.has_attn:
@@ -230,14 +255,31 @@ def cache_pspecs(cfg: ModelConfig, plan: ShardingPlan):
     """PartitionSpecs for a DecodeCache pytree."""
     from repro.models.model import DecodeCache
     r = plan.rules
+    layers = r.get("layers")
     k = v = ssm = conv = None
     if cfg.has_attn:
-        k = P(None, r["batch"], r["kv_seq"], r["kv_heads"], None)
+        k = P(layers, r["batch"], r["kv_seq"], r["kv_heads"], None)
         v = k
     if cfg.has_ssm:
-        ssm = P(None, r["batch"], r["ssm_heads"], None, None)
-        conv = P(None, r["batch"], None, None)
+        ssm = P(layers, r["batch"], r["ssm_heads"], None, None)
+        conv = P(layers, r["batch"], None, None)
     return DecodeCache(k=k, v=v, ssm=ssm, conv=conv, pos=P(r["batch"]))
+
+
+def pool_pspecs(cfg: ModelConfig, plan: ShardingPlan) -> P | None:
+    """PartitionSpec for one paged K/V ``BlockPool`` array.
+
+    Pool layout is ``[L, num_blocks + 1, Hkv, page, D]`` (kernel-native):
+    the layer axis shards over ``pipe`` (pp), the KV-head axis over
+    ``model`` (tp, when divisible), and pages/positions stay whole — block
+    tables address a head-sharded pool exactly like an unsharded one, which
+    is what keeps the host allocator and the migration page-handoff path
+    oblivious to sharding.
+    """
+    if not cfg.has_attn:
+        return None
+    r = plan.rules
+    return P(r.get("layers"), None, r["kv_heads"], None, None)
 
 
 def named(mesh: Mesh, spec_tree):
@@ -264,8 +306,15 @@ def pad_attention_params(params, cfg: ModelConfig, padded: ModelConfig):
     D = cfg.head_dim
     q_old, q_new = cfg.n_q_heads, padded.n_q_heads
     kv_old, kv_new = cfg.n_kv_heads, padded.n_kv_heads
-    g_old = q_old // kv_old
-    g_new = q_new // kv_new
+    if kv_new != kv_old:
+        # MHA: kv pads together with q (pad_heads returns (qp, qp)), so the
+        # whole head axis is ONE group — real heads keep slots [0, q_old)
+        # and padded q/kv heads pair up at the tail (wk/wv pad below
+        # appends kv zeros at the end, matching)
+        groups, per_old, per_new = 1, q_old, q_new
+    else:
+        # GQA: kv heads unchanged; pad heads-per-group inside each group
+        groups, per_old, per_new = kv_old, q_old // kv_old, q_new // kv_new
 
     def scatter_cols(w, heads_old, heads_new, groups, per_old, per_new):
         # w: [..., heads_old*D] -> [..., heads_new*D] group-aware
@@ -277,12 +326,14 @@ def pad_attention_params(params, cfg: ModelConfig, padded: ModelConfig):
 
     def fix_attn(a):
         a = dict(a)
-        a["wq"] = scatter_cols(a["wq"], q_old, q_new, kv_old, g_old, g_new)
+        a["wq"] = scatter_cols(a["wq"], q_old, q_new, groups,
+                               per_old, per_new)
         a["wo"] = jnp.moveaxis(
             scatter_cols(jnp.moveaxis(a["wo"], -1, -2), q_old, q_new,
-                         kv_old, g_old, g_new), -1, -2)
+                         groups, per_old, per_new), -1, -2)
         if "bq" in a:
-            a["bq"] = scatter_cols(a["bq"], q_old, q_new, kv_old, g_old, g_new)
+            a["bq"] = scatter_cols(a["bq"], q_old, q_new, groups,
+                                   per_old, per_new)
         if kv_new != kv_old:
             for name in ("wk", "wv"):
                 w = a[name]

@@ -212,10 +212,15 @@ def paged_decode_attention(x: jax.Array, p: dict, cfg: ModelConfig,
     B = x.shape[0]
     pos = lens
     q, k_new, v_new = _project_qkv(x, p, cfg, pos[:, None])
+    # sharded replicas: q by (tp) heads, the new K/V token by KV heads, so
+    # the page scatter below stays local to the head shard that owns it
+    q = logical(q, "batch", None, "heads", None)
     page = k_pages.shape[2]
     Hkv = k_pages.shape[1]
     dpad = k_pages.shape[-1] - cfg.head_dim   # pool head_pad (kernel path)
     kn, vn = k_new[:, 0], v_new[:, 0]
+    kn = logical(kn, "batch", "kv_heads", None)
+    vn = logical(vn, "batch", "kv_heads", None)
     if dpad:
         kn = jnp.pad(kn, ((0, 0), (0, 0), (0, dpad)))
         vn = jnp.pad(vn, ((0, 0), (0, 0), (0, dpad)))
@@ -289,8 +294,11 @@ def paged_decode_attention_buffered(x: jax.Array, p: dict, cfg: ModelConfig,
     H = kh.shape[1]
     pos = pool_lens + step_idx
     q, k_new, v_new = _project_qkv(x, p, cfg, pos[:, None])
+    q = logical(q, "batch", None, "heads", None)
     kh = kh.at[:, step_idx].set(k_new[:, 0].astype(kh.dtype))
     vh = vh.at[:, step_idx].set(v_new[:, 0].astype(vh.dtype))
+    kh = logical(kh, "batch", None, "kv_heads", None)
+    vh = logical(vh, "batch", None, "kv_heads", None)
 
     # gather the paged prefix, then overlay the horizon buffer at its
     # absolute positions (entries past ``lens`` are masked out below, so
@@ -338,6 +346,9 @@ def prefill_chunk_attention(x: jax.Array, p: dict, cfg: ModelConfig,
     B, C = x.shape[0], x.shape[1]
     pos = start + jnp.arange(C, dtype=jnp.int32)           # [C]
     q, k_new, v_new = _project_qkv(x, p, cfg, pos[None, :])
+    q = logical(q, "batch", "seq", "heads", None)
+    k_new = logical(k_new, "batch", "seq", "kv_heads", None)
+    v_new = logical(v_new, "batch", "seq", "kv_heads", None)
     page = k_pages.shape[2]
     Hkv = k_pages.shape[1]
     n_pages = block_table.shape[1]

@@ -576,6 +576,9 @@ def decode_loop_paged(params, cfg: ModelConfig, tokens,
     pool_lens = state.lens
     kh = jnp.zeros((L, B, horizon, cfg.n_kv_heads, cfg.head_dim),
                    state.k.dtype)
+    # horizon side buffer shards like the pool: layers over pp, KV heads
+    # over tp (identity when no sharding rules are installed)
+    kh = logical(kh, "layers", "batch", None, "kv_heads", None)
     vh = jnp.zeros_like(kh)
 
     def body(carry, i):

@@ -51,15 +51,28 @@ KV migration a prospective switch would trigger.
 
 ``set_throttle`` injects a straggler (a replica that only steps a fraction
 of the ticks) for chaos/regression testing of the health feedback loop.
+
+With ``shard=True`` a replica's (tp, pp) is *executed*, not just modeled:
+the runtime carves the device set into one contiguous sub-mesh per replica
+(``launch.mesh.make_replica_mesh``), shards each replica's params and paged
+KV pool per the serve ``ShardingPlan`` (heads/d_ff/vocab over tp, layers
+over pp, KV pools along the KV-head axis), and deployment switches rebuild
+meshes.  Replicas then hold per-replica pools — a shared pool cannot span
+disjoint meshes — so switch-time migrations ride the cross-pool
+``reshard_blocks`` path (dense gather, cross-mesh hop, head-sharded
+scatter): bytes move, but still zero tokens recomputed.
 """
 from __future__ import annotations
 
 import dataclasses
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.types import ReplicaConfig
+from repro.launch.mesh import make_replica_mesh
+from repro.launch.sharding import make_plan, pad_attention_params
 from repro.models.config import ModelConfig
 from repro.serving.engine import (EngineRequest, InflightSnapshot,
                                   ServingEngine, head_pad_for,
@@ -120,7 +133,8 @@ class ClusterRuntime:
                  decode_mode: str = "paged", attn_impl: str = "auto",
                  dtype=jnp.float32, seed: int = 0,
                  prefill_chunk_tokens: int | None = None,
-                 decode_horizon: int = 1):
+                 decode_horizon: int = 1,
+                 shard: bool = False, devices=None):
         """Args:
           cfg/params: the (one) model every replica serves — heterogeneity
             is in per-replica capacity, not weights.
@@ -136,6 +150,15 @@ class ClusterRuntime:
             (None = one-shot prefill; see ``ServingEngine``).
           decode_horizon: max fused decode steps per replica dispatch
             (1 = per-step decode; see ``ServingEngine``).
+          shard: execute each replica's (tp, pp) for real — the device set
+            (``devices``, default ``jax.devices()``) is carved into one
+            contiguous sub-mesh per replica (``launch.mesh
+            .make_replica_mesh``), params/KV pools are sharded per the
+            serve ``ShardingPlan``, and deployment switches rebuild meshes.
+            Replicas then hold *per-replica* pools (a shared pool cannot
+            span disjoint meshes), so in-flight migrations ride the
+            cross-pool reshard path (``kvcache.reshard_blocks``) instead of
+            the free same-pool page handoff — still zero recompute.
         """
         if total_chips is None:
             if orch is None:
@@ -155,8 +178,21 @@ class ClusterRuntime:
         self.attn_impl, _ = resolve_attn_impl(attn_impl)
         self.dtype = dtype
         self.seed = seed
-        self.pool = BlockPool(cfg, blocks_per_chip * total_chips, block_size,
-                              dtype, head_pad_for(self.attn_impl))
+        self.shard = shard
+        self.devices = None
+        self._replica_devices: dict[int, tuple] = {}
+        # (q_heads, kv_heads) -> head-padded params, reused across switches
+        self._padded_params: dict[tuple, object] = {}
+        if shard:
+            if decode_mode != "paged":
+                raise ValueError("shard=True needs decode_mode='paged'")
+            self.devices = list(devices if devices is not None
+                                else jax.devices())
+            self.pool = None    # per-replica pools, one per sub-mesh
+        else:
+            self.pool = BlockPool(cfg, blocks_per_chip * total_chips,
+                                  block_size, dtype,
+                                  head_pad_for(self.attn_impl))
         self.router: Router = router if router is not None else FlowRouter(
             [[1.0]])
         self.replicas: list[ReplicaHandle] = []
@@ -190,15 +226,50 @@ class ClusterRuntime:
         max_bps = max(1, min(cfg_cap, quota))
         return max_seqs, quota, max_bps
 
-    def _build_engine(self, rc: ReplicaConfig) -> ServingEngine:
+    def _build_engine(self, rc: ReplicaConfig,
+                      devices=None) -> ServingEngine:
         max_seqs, quota, max_bps = self._sizing(rc)
-        return ServingEngine(
-            self.cfg, self.params, block_size=self.block_size,
-            max_seqs=max_seqs, dtype=self.dtype, greedy=True, seed=self.seed,
-            decode_mode=self.decode_mode, attn_impl=self.attn_impl,
-            pool=self.pool, kv_quota=quota, max_blocks_per_seq=max_bps,
+        common = dict(
+            block_size=self.block_size, max_seqs=max_seqs, dtype=self.dtype,
+            greedy=True, seed=self.seed, decode_mode=self.decode_mode,
+            attn_impl=self.attn_impl, max_blocks_per_seq=max_bps,
             prefill_chunk_tokens=self.prefill_chunk_tokens,
             decode_horizon=self.decode_horizon)
+        if not self.shard:
+            return ServingEngine(self.cfg, self.params, pool=self.pool,
+                                 kv_quota=quota, **common)
+        # real intra-replica parallelism: a sub-mesh of rc.chips devices,
+        # the serve-mode sharding plan for (tp, pp), a private head-sharded
+        # pool sized to this replica's quota
+        mesh = make_replica_mesh(devices, rc.tp, rc.pp)
+        plan, run_cfg = make_plan(self.cfg, "serve", False, 1,
+                                  tp=rc.tp, pp=rc.pp)
+        params = self.params
+        if (run_cfg.n_q_heads != self.cfg.n_q_heads
+                or run_cfg.n_kv_heads != self.cfg.n_kv_heads):
+            # head padding depends only on the padded head counts: cache it
+            # so repeated switches don't re-pad the whole pytree inside the
+            # switch window
+            key = (run_cfg.n_q_heads, run_cfg.n_kv_heads)
+            params = self._padded_params.get(key)
+            if params is None:
+                params = pad_attention_params(self.params, self.cfg, run_cfg)
+                self._padded_params[key] = params
+        return ServingEngine(run_cfg, params, num_blocks=quota,
+                             mesh=mesh, shard_plan=plan, **common)
+
+    def _carve(self, rcs: list[ReplicaConfig]) -> list[tuple]:
+        """Contiguous per-replica device slices, in replica-index order."""
+        need = sum(rc.chips for rc in rcs)
+        if need > len(self.devices):
+            raise ValueError(
+                f"deployment needs {need} devices but this runtime has "
+                f"{len(self.devices)} (pass devices= or shrink the plan)")
+        slices, off = [], 0
+        for rc in rcs:
+            slices.append(tuple(self.devices[off:off + rc.chips]))
+            off += rc.chips
+        return slices
 
     @property
     def total_prefill_tokens(self) -> int:
@@ -230,8 +301,14 @@ class ClusterRuntime:
         if len(self._span_type_counts) != self.n_types:
             self._span_type_counts = np.zeros(self.n_types)
         old = self.replicas
+        # sharded runtimes carve devices contiguously in replica order, so a
+        # replica whose config is unchanged must ALSO keep its device slice
+        # (an earlier replica growing/shrinking shifts everyone behind it)
+        slices = self._carve(new_rcs) if self.shard else None
         changed = [k for k in range(len(new_rcs))
-                   if k >= len(old) or old[k].rc != new_rcs[k]]
+                   if k >= len(old) or old[k].rc != new_rcs[k]
+                   or (self.shard
+                       and self._replica_devices.get(k) != slices[k])]
         torn_down = [old[k] for k in changed if k < len(old)]
         torn_down += old[len(new_rcs):]            # shrink: dropped replicas
 
@@ -278,9 +355,12 @@ class ClusterRuntime:
         # 3) rebuild changed replicas under the new configuration
         self.replicas = [
             old[k] if k not in changed and k < len(old)
-            else ReplicaHandle(k, new_rcs[k], self._build_engine(new_rcs[k]))
+            else ReplicaHandle(k, new_rcs[k], self._build_engine(
+                new_rcs[k], slices[k] if self.shard else None))
             for k in range(len(new_rcs))
         ]
+        if self.shard:
+            self._replica_devices = dict(enumerate(slices))
         self.router.reconfigure(plan.fractions)
 
         # 4) re-route exported requests through the new assignment, batched
@@ -424,11 +504,12 @@ class ClusterRuntime:
         if self.orch is not None:
             self.orch.observe_health(achieved)
             self.orch.observe_rates(self._span_type_counts)
-            # what a switch decided *now* would have to migrate; replicas
-            # share one pool, so migrations ride the free page-handoff path
+            # what a switch decided *now* would have to migrate; with one
+            # shared pool migrations ride the free page-handoff path, while
+            # per-replica sharded pools pay the page-movement cost
             lens = [c for h in self.replicas
                     for c in h.engine.inflight_context_lens()]
-            self.orch.observe_inflight(lens, shared_pool=True)
+            self.orch.observe_inflight(lens, shared_pool=not self.shard)
         for h in self.replicas:
             h.slot_ticks = 0
             h.emitted_span = 0

@@ -88,19 +88,22 @@ instead of each replica reserving a max-size cache.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.models import (DecodeCache, PagedDecodeState, decode_loop_paged,
                           decode_step, prefill, prefill_chunk)
 from repro.models.config import ModelConfig
 from repro.models.sampling import sample
+from repro.pshard import sharding_rules
 from repro.serving.kvcache import (BlockPool, PagedKVCache, copy_blocks,
-                                   relayout_blocks)
+                                   relayout_blocks, reshard_blocks)
 
 
 def resolve_attn_impl(attn_impl: str) -> tuple[str, bool]:
@@ -203,7 +206,19 @@ class ServingEngine:
                  pool: BlockPool | None = None, kv_quota: int | None = None,
                  max_blocks_per_seq: int | None = None,
                  prefill_chunk_tokens: int | None = None,
-                 decode_horizon: int = 1):
+                 decode_horizon: int = 1,
+                 mesh=None, shard_plan=None):
+        """``mesh`` + ``shard_plan`` turn on real intra-replica model
+        parallelism: params are placed with ``param_pspecs`` shardings, the
+        paged K/V pool is sharded along its KV-head (tp) and layer (pp)
+        axes (``pool_pspecs``), and every jitted forward is traced under the
+        plan's logical-axis rules so GSPMD partitions prefill, the fused
+        decode loop, and chunked prefill across the replica's devices.  The
+        host scheduler / allocator / block tables are sharding-oblivious.
+        ``cfg``/``params`` must already be the plan's run config (head-
+        padded when ``shard_plan.attn_mode == "pad"`` — see
+        ``launch.sharding.pad_attention_params``).
+        """
         self.cfg = cfg
         self.params = params
         if decode_mode not in ("paged", "dense"):
@@ -216,12 +231,30 @@ class ServingEngine:
         self.decode_horizon = decode_horizon
         attn_impl, self._interpret = resolve_attn_impl(attn_impl)
         self._attn_impl = attn_impl
+        self._mesh = mesh
+        self._shard_plan = shard_plan
+        if mesh is not None:
+            if shard_plan is None:
+                raise ValueError("a sharded engine needs shard_plan "
+                                 "(launch.sharding.make_plan(..., 'serve'))")
+            if decode_mode != "paged":
+                raise ValueError("sharded engines need decode_mode='paged'")
+            if attn_impl == "kernel":
+                raise NotImplementedError(
+                    "the Pallas kernel path is not shard_map-wired yet; "
+                    "sharded engines use attn_impl='jnp'")
+            from repro.launch.sharding import named, param_pspecs
+            self.params = jax.device_put(
+                params, named(mesh, param_pspecs(cfg, shard_plan)))
         # the kernel path wants lane-aligned head_dim; pad the pool once at
         # allocation rather than re-padding it every decode step
         head_pad = head_pad_for(attn_impl)
         if max_blocks_per_seq is None:
             max_blocks_per_seq = cfg.max_seq_len // block_size
         if pool is not None:
+            if mesh is not None and pool.mesh != mesh:
+                raise ValueError("shared pool lives on a different mesh "
+                                 "than this engine")
             if pool.block_size != block_size:
                 raise ValueError(
                     f"shared pool block_size {pool.block_size} != engine "
@@ -233,10 +266,15 @@ class ServingEngine:
             self.cache = PagedKVCache.from_pool(
                 pool, max_seqs, max_blocks_per_seq, quota=kv_quota)
         else:
+            kv_spec = None
+            if mesh is not None:
+                from repro.launch.sharding import pool_pspecs
+                kv_spec = pool_pspecs(cfg, shard_plan)
             self.cache = PagedKVCache.create(
                 cfg, num_blocks, block_size, max_seqs,
                 max_blocks_per_seq=max_blocks_per_seq, dtype=dtype,
-                head_pad=head_pad)
+                head_pad=head_pad, mesh=mesh, kv_spec=kv_spec,
+                rules=shard_plan.rules if shard_plan else None)
         self.max_seqs = max_seqs
         self.dtype = dtype
         self.greedy = greedy
@@ -282,6 +320,29 @@ class ServingEngine:
             lambda p, t, k, v, tab, s, nv: prefill_chunk(
                 p, cfg, t, k, v, tab, s, nv, trash),
             donate_argnums=donate)
+
+    def _rules_ctx(self):
+        """Context installing the replica's logical-axis sharding rules.
+
+        The ``logical(...)`` annotations in the model only bind at *trace*
+        time, so every jitted call site enters this context — re-traces for
+        new shape buckets then pick up the replica's mesh rules; unsharded
+        engines get a no-op."""
+        if self._mesh is None:
+            return contextlib.nullcontext()
+        return sharding_rules(self._mesh, self._shard_plan.rules)
+
+    def _local(self, x):
+        """Bring a (possibly other-mesh) array onto this engine's devices.
+
+        Migration snapshots carry SSM state rows that live on the *source*
+        replica's mesh; mixing them into this engine's arrays needs an
+        explicit cross-mesh hop first."""
+        if x is None:
+            return None
+        if self._mesh is not None:
+            return jax.device_put(x, NamedSharding(self._mesh, P()))
+        return jax.device_put(x, jax.devices()[0])
 
     def _build_fused(self):
         """The jitted device-resident decode loop (up to ``horizon`` steps).
@@ -484,19 +545,31 @@ class ServingEngine:
                 slot = free[0]
                 self.cache.admit(slot, s.seq_len, total_tokens=total)
                 dst_blocks = self.cache.seq_blocks[slot]
+                same_place = s.pool.placement == self.cache.pool.placement
+                same_heads = (s.pool.k is None
+                              or s.pool.k.shape[2] == self.cache.k.shape[2])
                 if s.pool.k is None:
                     pass      # attn-free arch: state is the SSM rows below
-                elif (s.pool.block_size == self.cache.block_size
+                elif (same_place and same_heads
+                        and s.pool.block_size == self.cache.block_size
                         and s.pool.k.shape[2:] == self.cache.k.shape[2:]):
                     copy_blocks(s.pool, self.cache.pool, s.blocks, dst_blocks)
-                else:
+                elif same_place and same_heads:
                     relayout_blocks(s.pool, self.cache.pool, s.blocks,
                                     dst_blocks, s.seq_len)
+                else:
+                    # pools on different meshes / head shardings / padded
+                    # head counts: dense gather + explicit cross-mesh hop +
+                    # head fix + re-chunked scatter
+                    reshard_blocks(s.pool, self.cache.pool, s.blocks,
+                                   dst_blocks, s.seq_len)
                 s.pool.allocator.release(s.blocks)
             if s.ssm is not None:
-                self.cache.ssm = self.cache.ssm.at[:, slot].set(s.ssm)
+                self.cache.ssm = self.cache.ssm.at[:, slot].set(
+                    self._local(s.ssm))
             if s.conv is not None:
-                self.cache.conv = self.cache.conv.at[:, slot].set(s.conv)
+                self.cache.conv = self.cache.conv.at[:, slot].set(
+                    self._local(s.conv))
             r = EngineRequest(s.rid, np.asarray(s.prompt, np.int32),
                               s.max_new_tokens, slot=slot,
                               generated=list(s.generated))
@@ -610,7 +683,8 @@ class ServingEngine:
             by_len.setdefault(len(r.prefill_tokens), []).append(r)
         for pl, group in by_len.items():
             toks = np.stack([r.prefill_tokens for r in group])
-            logits, cache = self._prefill(self.params, jnp.asarray(toks))
+            with self._rules_ctx():
+                logits, cache = self._prefill(self.params, jnp.asarray(toks))
             first = self._pick(logits)           # one sync per prefill group
             self.prefill_tokens += pl * len(group)
             for i, r in enumerate(group):
@@ -669,9 +743,11 @@ class ServingEngine:
             need = (start + n_valid + bs - 1) // bs
             n_pages = _pow2_bucket(need, self.cache.max_blocks_per_seq)
             table = self.cache.block_table_dev[slot:slot + 1, :n_pages]
-            logits, k, v = self._chunk(self.params, jnp.asarray(buf),
-                                       self.cache.k, self.cache.v, table,
-                                       jnp.int32(start), jnp.int32(n_valid))
+            with self._rules_ctx():
+                logits, k, v = self._chunk(self.params, jnp.asarray(buf),
+                                           self.cache.k, self.cache.v, table,
+                                           jnp.int32(start),
+                                           jnp.int32(n_valid))
             self.cache.k, self.cache.v = k, v
             self.prefill_tokens += n_valid
             budget -= n_valid
@@ -743,12 +819,13 @@ class ServingEngine:
         self._sample_step += horizon
         self.horizon_counts[horizon] = self.horizon_counts.get(horizon, 0) + 1
         self.last_horizon = horizon
-        toks, k, v, lens_dev, ssm, conv = self._fused(
-            self.params, self.cache.k, self.cache.v,
-            self.cache.block_table_dev, self.cache.seq_lens_dev,
-            self.cache.ssm, self.cache.conv,
-            jnp.asarray(slot_arr), jnp.asarray(last), self.key,
-            jnp.int32(step0), n_pages=n_pages, horizon=horizon)
+        with self._rules_ctx():
+            toks, k, v, lens_dev, ssm, conv = self._fused(
+                self.params, self.cache.k, self.cache.v,
+                self.cache.block_table_dev, self.cache.seq_lens_dev,
+                self.cache.ssm, self.cache.conv,
+                jnp.asarray(slot_arr), jnp.asarray(last), self.key,
+                jnp.int32(step0), n_pages=n_pages, horizon=horizon)
         self.cache.k, self.cache.v = k, v
         self.cache.seq_lens_dev = lens_dev
         self.cache.ssm, self.cache.conv = ssm, conv

@@ -48,6 +48,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.models.config import ModelConfig
 
@@ -94,12 +95,23 @@ class BlockPool:
     """
 
     def __init__(self, cfg: ModelConfig, num_blocks: int,
-                 block_size: int = 16, dtype=jnp.float32, head_pad: int = 1):
+                 block_size: int = 16, dtype=jnp.float32, head_pad: int = 1,
+                 mesh=None, kv_spec=None, rules: dict | None = None):
+        """``mesh`` + ``kv_spec`` (a ``PartitionSpec`` over the pool layout
+        ``[L, P + 1, Hkv, page, D]`` — see ``launch.sharding.pool_pspecs``)
+        place the pool sharded over one serving replica's device mesh:
+        KV heads over tp, layers over pp.  Block ids and the allocator are
+        untouched — a page is a page whatever its head sharding.  ``rules``
+        (the plan's logical-axis rules) additionally shard replica SSM state
+        created by ``PagedKVCache.from_pool``."""
         self.cfg = cfg
         self.num_blocks = num_blocks
         self.block_size = block_size
         self.dtype = dtype
         self.head_pad = head_pad
+        self.mesh = mesh
+        self.kv_spec = kv_spec
+        self.rules = rules or {}
         self.k = self.v = None
         if cfg.has_attn:
             # head_pad > 1 (the Pallas kernel path) pads head_dim once at
@@ -109,12 +121,26 @@ class BlockPool:
                      block_size, d_pool)
             self.k = jnp.zeros(shape, dtype)
             self.v = jnp.zeros(shape, dtype)
+            if mesh is not None:
+                sh = NamedSharding(mesh, kv_spec if kv_spec is not None
+                                   else P())
+                self.k = jax.device_put(self.k, sh)
+                self.v = jax.device_put(self.v, sh)
         self.allocator = BlockAllocator(num_blocks)
         self.reserved = 0           # blocks promised to admitted sequences
 
     @property
     def trash_page(self) -> int:
         return self.num_blocks
+
+    @property
+    def placement(self):
+        """Device placement + sharding identity: two pools with equal
+        placement can exchange pages by the jitted same-mesh copy; unequal
+        placements must go through ``reshard_blocks``."""
+        if self.mesh is None:
+            return None
+        return (self.mesh, self.kv_spec)
 
 
 @dataclasses.dataclass
@@ -141,9 +167,11 @@ class PagedKVCache:
     def create(cls, cfg: ModelConfig, num_blocks: int = 256,
                block_size: int = 16, max_seqs: int = 16,
                max_blocks_per_seq: int = 64, dtype=jnp.float32,
-               head_pad: int = 1) -> "PagedKVCache":
+               head_pad: int = 1, mesh=None, kv_spec=None,
+               rules: dict | None = None) -> "PagedKVCache":
         """Single-replica cache over a private pool."""
-        pool = BlockPool(cfg, num_blocks, block_size, dtype, head_pad)
+        pool = BlockPool(cfg, num_blocks, block_size, dtype, head_pad,
+                         mesh=mesh, kv_spec=kv_spec, rules=rules)
         return cls.from_pool(pool, max_seqs, max_blocks_per_seq, quota=None)
 
     @classmethod
@@ -169,6 +197,19 @@ class PagedKVCache:
         table_dev = jnp.full((max_seqs + 1, max_blocks_per_seq),
                              pool.trash_page, jnp.int32)
         lens_dev = jnp.zeros((max_seqs + 1,), jnp.int32)
+        if pool.mesh is not None:
+            # metadata replicates across the replica mesh; SSM state shards
+            # by head (tp) / layer (pp) per the plan rules
+            rep = NamedSharding(pool.mesh, P())
+            table_dev = jax.device_put(table_dev, rep)
+            lens_dev = jax.device_put(lens_dev, rep)
+            r = pool.rules
+            if ssm is not None:
+                ssm = jax.device_put(ssm, NamedSharding(
+                    pool.mesh,
+                    P(r.get("layers"), None, r.get("ssm_heads"), None, None)))
+                conv = jax.device_put(conv, NamedSharding(
+                    pool.mesh, P(r.get("layers"), None, None, None)))
         return cls(cfg, pool.block_size, pool.num_blocks, max_seqs,
                    max_blocks_per_seq, pool, ssm, conv,
                    np.zeros((max_seqs, max_blocks_per_seq), np.int32),
@@ -535,4 +576,35 @@ def relayout_blocks(src: BlockPool, dst: BlockPool,
     (block_size and/or kernel head_pad): dense gather then re-chunked
     scatter, entirely on device."""
     k, v = gather_tokens(src, src_blocks, seq_len)
+    scatter_tokens(dst, dst_blocks, k, v)
+
+
+def reshard_blocks(src: BlockPool, dst: BlockPool,
+                   src_blocks: list[int], dst_blocks: list[int],
+                   seq_len: int) -> None:
+    """Move one sequence between pools that live on *different meshes /
+    head shardings* (per-replica sharded serving) — the migration path a
+    deployment switch between replicas of unlike (tp, pp) takes.
+
+    The page data rides the existing relayout route: dense gather on the
+    source mesh, an explicit cross-mesh ``device_put`` hop onto the
+    destination's devices, a KV-head fix when the two replicas run
+    different head-padded configs (a padded source keeps its real heads
+    first, so the pad columns slice off; a padded destination's extra heads
+    are zero rows only padded q heads ever attend), then the re-chunked
+    scatter into the destination's (head-sharded) pages.  Zero tokens are
+    recomputed — only bytes move.
+    """
+    k, v = gather_tokens(src, src_blocks, seq_len)
+    src_h, dst_h = k.shape[2], dst.cfg.n_kv_heads
+    if src_h > dst_h:
+        k, v = k[:, :, :dst_h], v[:, :, :dst_h]
+    elif src_h < dst_h:
+        hp = ((0, 0), (0, 0), (0, dst_h - src_h), (0, 0))
+        k, v = jnp.pad(k, hp), jnp.pad(v, hp)
+    if dst.mesh is not None:
+        tgt = NamedSharding(dst.mesh, P())
+    else:
+        tgt = jax.devices()[0]
+    k, v = jax.device_put(k, tgt), jax.device_put(v, tgt)
     scatter_tokens(dst, dst_blocks, k, v)

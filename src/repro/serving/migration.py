@@ -13,11 +13,16 @@ cheapest restore path available, in order:
      recomputed.  Because ``ClusterRuntime`` partitions one shared device
      pool across all replicas, this is the common case for every in-cluster
      switch.
-  2. **Device page copy / relayout** (different pools): a jitted
+  2. **Device page copy / relayout / reshard** (different pools): a jitted
      gather/scatter moves the pages between pools (``kvcache.copy_blocks``),
      falling back to a dense gather + re-chunked scatter when the page
-     geometry differs (``kvcache.relayout_blocks``).  Still zero tokens
-     recomputed — only bytes move.
+     geometry differs (``kvcache.relayout_blocks``), or — when the pools
+     live on *different replica meshes / head shardings* (sharded
+     ``ClusterRuntime``, per-replica (tp, pp) sub-meshes) — to
+     ``kvcache.reshard_blocks``, which adds an explicit cross-mesh
+     ``device_put`` hop and a KV-head slice/pad between head-padded
+     configs.  Still zero tokens recomputed — only bytes move; all three
+     count as ``copied``/``pages_copied`` in the report.
   3. **Re-prefill** (no pages, or the destination cannot hold them): the
      token-state fallback inherited from the previous design; with chunked
      prefill enabled on the destination engine the recompute interleaves

@@ -52,12 +52,19 @@ class RealSpanOutcome:
 
 
 def run_real_spans(model: str = "opt-30b", chips: int = 6, n_spans: int = 2,
-                   requests_per_span: int = 6, seed: int = 0
+                   requests_per_span: int = 6, seed: int = 0,
+                   shard: bool = False
                    ) -> tuple[list[RealSpanOutcome], "object"]:
     """Drive ``n_spans`` orchestrator plans through a real ClusterRuntime.
 
     Returns the per-span outcomes and the runtime (whose ``results`` hold
     every finished request for parity / completeness checks).
+
+    ``shard=True`` executes each replica's (tp, pp) on a real per-replica
+    device sub-mesh (needs >= ``chips`` jax devices, e.g. under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``); plans are
+    otherwise identical, so the predicted-vs-achieved scoring is directly
+    comparable between the two modes.
     """
     import jax
     import jax.numpy as jnp
@@ -76,7 +83,7 @@ def run_real_spans(model: str = "opt-30b", chips: int = 6, n_spans: int = 2,
                         OrchestratorConfig(search_patience=8))
     runtime = ClusterRuntime(cfg, params, orch, blocks_per_chip=16,
                              seqs_per_chip=1, block_size=8, drain_steps=2,
-                             seed=seed)
+                             seed=seed, shard=shard)
     rng = np.random.RandomState(seed)
     outcomes: list[RealSpanOutcome] = []
     rid = 0
