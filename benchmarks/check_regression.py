@@ -2,8 +2,8 @@
 
 CI used to fail benchmarks only when they raised; this script turns the
 numbers themselves into a gate.  The workflow stashes the committed
-``BENCH_engine.json`` / ``BENCH_switch.json`` before the bench steps
-overwrite them, then runs::
+``BENCH_engine.json`` / ``BENCH_switch.json`` / ``BENCH_recovery.json``
+before the bench steps overwrite them, then runs::
 
     python benchmarks/check_regression.py \
         --baseline-dir .bench-baseline --fresh-dir .
@@ -34,11 +34,13 @@ import sys
 
 ENGINE_JSON = "BENCH_engine.json"
 SWITCH_JSON = "BENCH_switch.json"
+RECOVERY_JSON = "BENCH_recovery.json"
 
 # machine-independent ratio floors (hard gates)
 PAGED_VS_DENSE_MIN = 10.0       # committed: ~80-250x on CPU smoke
 HORIZON_H8_MIN = 2.0            # CI-asserted in bench_engine too
 HANDOFF_VS_REPREFILL_MIN = 5.0  # CI-asserted in bench_switch too
+RECOVERY_HANDOFF_MIN = 5.0      # CI-asserted in bench_recovery too
 
 
 def _load(d: pathlib.Path, name: str) -> dict:
@@ -140,6 +142,39 @@ def check_switch(base: dict, fresh: dict, stall_tol: float) -> list[str]:
     return bad
 
 
+def check_recovery(base: dict, fresh: dict, stall_tol: float) -> list[str]:
+    bad: list[str] = []
+    b_rows = _index(base["results"], "mode")
+    f_rows = _index(fresh["results"], "mode")
+    for key, br in sorted(b_rows.items()):
+        fr = f_rows.get(key)
+        if fr is None:
+            bad.append(f"recovery {key[0]}: recovery path missing from "
+                       f"fresh run")
+            continue
+        ceil = stall_tol * br["stall_ms"]
+        ok = fr["stall_ms"] <= ceil
+        print(f"recovery/{key[0]}: stall {fr['stall_ms']:.2f}ms "
+              f"(baseline {br['stall_ms']:.2f}, ceiling {ceil:.2f}) "
+              f"{'ok' if ok else 'REGRESSED'}")
+        if not ok:
+            bad.append(f"recovery {key[0]}: stall {fr['stall_ms']:.2f}ms "
+                       f"> {stall_tol:.1f}x baseline {br['stall_ms']:.2f}ms")
+        # recovery-path structure is deterministic: must match exactly
+        for field in ("recovered", "handoff", "reprefilled",
+                      "pages_handoff", "recompute_tokens"):
+            if fr.get(field) != br.get(field):
+                bad.append(f"recovery {key[0]}: {field} = {fr.get(field)} "
+                           f"(baseline {br.get(field)}) — recovery path "
+                           f"changed")
+    x = fresh.get("handoff_vs_reprefill_x", 0.0)
+    print(f"recovery/handoff_vs_reprefill: {x:.2f}x")
+    if x < RECOVERY_HANDOFF_MIN:
+        bad.append(f"recovery: handoff only {x:.2f}x cheaper than "
+                   f"re-prefill (needs >= {RECOVERY_HANDOFF_MIN}x)")
+    return bad
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline-dir", required=True, type=pathlib.Path,
@@ -160,6 +195,9 @@ def main(argv=None) -> int:
     bad += check_switch(_load(args.baseline_dir, SWITCH_JSON),
                         _load(args.fresh_dir, SWITCH_JSON),
                         args.stall_tolerance)
+    bad += check_recovery(_load(args.baseline_dir, RECOVERY_JSON),
+                          _load(args.fresh_dir, RECOVERY_JSON),
+                          args.stall_tolerance)
     if bad:
         print("\nBENCH REGRESSIONS:", file=sys.stderr)
         for b in bad:

@@ -217,6 +217,45 @@ class Orchestrator:
 
     # -- fault tolerance / elasticity (Appendix C) -------------------------------
 
+    def observe_failures(self, dead_replicas: list[int],
+                         surviving_chips: int) -> None:
+        """Replica deaths reported by the runtime: shrink the chip budget
+        and prune the dead replicas from the planner's deployment state.
+
+        ``dead_replicas`` index the deployment the runtime was running
+        (cluster replica order == ``current.replicas`` order after an
+        applied plan).  Pruning keeps ``current``'s total chips equal to
+        the surviving budget, so the next ``plan_span`` both warm-starts
+        from and compares against a deployment that is actually feasible —
+        degraded-mode replanning re-solves over the survivors.  Health
+        entries are pruned in lockstep so EWMA state stays aligned.
+        """
+        self.cluster = ClusterSpec(int(surviving_chips), self.cluster.hw)
+        dead = set(dead_replicas)
+        if self.current is not None:
+            alive = tuple(rc for i, rc in enumerate(self.current.replicas)
+                          if i not in dead)
+            self.current = Deployment(alive) if alive else None
+        if self.placed is not None:
+            alive_p = tuple(r for i, r in enumerate(self.placed.replicas)
+                            if i not in dead)
+            self.placed = PlacedDeployment(alive_p) if alive_p else None
+        if self.health is not None:
+            keep = [a for i, a in enumerate(self.health) if i not in dead]
+            self.health = np.asarray(keep) if keep else None
+
+    def on_switch_rollback(self, live_replicas: tuple) -> None:
+        """A transactional switch failed and the runtime restored the old
+        deployment: point the planner back at what is actually running
+        (the most recent ``plan_span`` had already committed the new
+        deployment to ``current``/``placed``)."""
+        if not live_replicas:
+            self.current = None
+            self.placed = None
+            return
+        self.current = Deployment(tuple(live_replicas))
+        self.placed = place_deployment(self.current, self.cluster)
+
     def on_cluster_change(self, new_chips: int,
                           workloads: list[WorkloadType]) -> SpanPlan:
         """Node failure or elastic resize: re-plan on the surviving chips.

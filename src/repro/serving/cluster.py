@@ -61,6 +61,45 @@ meshes.  Replicas then hold per-replica pools — a shared pool cannot span
 disjoint meshes — so switch-time migrations ride the cross-pool
 ``reshard_blocks`` path (dense gather, cross-mesh hop, head-sharded
 scatter): bytes move, but still zero tokens recomputed.
+
+Failure model
+-------------
+The same machinery that reshapes deployments on purpose absorbs
+*unplanned* change (``serving.faults`` provides the deterministic chaos
+source for CI).  What is **detected**: a dispatch or sync error from a
+replica's engine — ``ReplicaCrash`` and any sync-phase error kill the
+replica outright; transient dispatch errors and admission ``MemoryError``s
+get retried with exponential backoff and escalate to death only after
+``max_retries`` consecutive failures; stalls raise nothing and are caught
+by the health feedback loop instead (low achieved/expected throughput →
+shrunken capacity next span).  What is **recovered**: a dead replica's
+in-flight and queued requests move to survivors through the cheapest
+migration path available — same-pool page handoff when the shared
+``BlockPool`` outlives the engine, cross-pool copy/reshard when sharded,
+and re-prefill from the cluster's host-side **request log** (prompt +
+every emitted token, updated at each sync) when the replica's device
+state cannot be trusted (``lose_pages`` crashes, or any failure after
+dispatch but before sync, when host and device lengths disagree).  Either
+way zero emitted tokens are lost and greedy token parity with a
+fault-free run is preserved.  What is **shed**: requests no survivor can
+hold (context ceiling / no live replica) are released and recorded in
+``shed_rids`` — the cluster degrades, it never wedges.  Dead replicas'
+chips leave the planning budget via ``Orchestrator.observe_failures`` so
+the next ``plan_span`` re-solves over survivors.
+
+Switch transaction
+------------------
+``apply_plan`` is transactional (prepare → commit, with rollback).
+PREPARE builds every new engine before any live engine is touched, so a
+build failure aborts with zero impact.  Then the old replicas drain and
+export their in-flight requests *keeping their KV pages*.  COMMIT
+installs the new engines, re-routes, and restores the exported requests
+per destination.  If a migration fails mid-commit, ROLLBACK re-exports
+whatever already landed on new engines (another free page handoff),
+rebuilds the old configuration, restores every request onto its origin
+replica, and reverts the router and orchestrator state — the switch
+reports ``rolled_back=True`` instead of raising, and serving continues
+on the old deployment.
 """
 from __future__ import annotations
 
@@ -77,9 +116,19 @@ from repro.models.config import ModelConfig
 from repro.serving.engine import (EngineRequest, InflightSnapshot,
                                   ServingEngine, head_pad_for,
                                   resolve_attn_impl)
+from repro.serving.faults import (FaultError, FaultPlan, InjectedOOM,
+                                  ReplicaCrash, TransientDispatchError,
+                                  error_for)
 from repro.serving.kvcache import BlockPool
-from repro.serving.migration import MigrationReport, migrate_batch
+from repro.serving.migration import (MigrationReport, migrate_batch,
+                                     release_snapshot_pages)
 from repro.serving.router import FlowRouter, Router
+
+
+class ClusterHangError(RuntimeError):
+    """``run_until_idle`` exhausted its tick budget with requests still
+    pending — a hang (wedged replica, starved queue) must surface instead
+    of masquerading as completion."""
 
 
 @dataclasses.dataclass
@@ -91,8 +140,16 @@ class ReplicaHandle:
     # health accounting (reset each span)
     slot_ticks: int = 0         # sum over ticks of busy slots (expected work)
     emitted_span: int = 0       # tokens actually emitted this span
+    completed_span: int = 0     # requests this replica finished this span
+    shed_mark: int = 0          # len(engine.shed_rids) at span start
     # straggler injection: step only every `period`-th tick
     period: int = 1
+    # failure state: a dead handle stays in ``replicas`` (router indices
+    # must remain stable mid-span) but is masked out of routing/stepping
+    # until the next apply_plan rebuilds or drops it
+    dead: bool = False
+    failures: int = 0           # consecutive dispatch failures (retry budget)
+    backoff_until: int = 0      # cluster tick the next retry may happen at
 
 
 @dataclasses.dataclass
@@ -109,6 +166,12 @@ class SwitchReport:
     pages_handoff: int = 0
     pages_copied: int = 0
     recompute_tokens: int = 0   # context tokens the fallback re-prefilled
+    dropped: int = 0            # exported requests no replica could hold
+    # transactional outcome: when a rebuild/migration failed mid-switch the
+    # old deployment was restored and the migration counters above describe
+    # the *restore* trip back onto it (``failure`` says what went wrong)
+    rolled_back: bool = False
+    failure: str = ""
 
     @property
     def moved(self) -> int:
@@ -122,7 +185,26 @@ class SpanReport:
     tokens: list[int]                # per-replica tokens emitted
     completed: int                   # requests finished this span
     type_counts: np.ndarray          # realized per-type arrivals [J]
-    shed: int = 0                    # waiting requests rejected (TTFT blown)
+    shed: int = 0                    # requests rejected by SLO (TTFT/TPOT)
+    # failure accounting for the span
+    dead_replicas: list[int] = dataclasses.field(default_factory=list)
+    retries: int = 0                 # transient-failure retries (all replicas)
+    recovery: MigrationReport = dataclasses.field(
+        default_factory=MigrationReport)   # how dead replicas' requests moved
+
+
+@dataclasses.dataclass
+class _RequestLog:
+    """Host-side record of one request: prompt + every token the cluster
+    has synced back for it.  This is the last-resort recovery source — a
+    replica whose device state cannot be trusted (crash with pages lost,
+    or a failure between dispatch and sync) rebuilds its requests from
+    here by re-prefill, losing zero emitted tokens."""
+    prompt: np.ndarray
+    max_new_tokens: int
+    emitted: list
+    ttft_deadline: float | None = None
+    tpot_deadline: float | None = None
 
 
 class ClusterRuntime:
@@ -134,7 +216,8 @@ class ClusterRuntime:
                  dtype=jnp.float32, seed: int = 0,
                  prefill_chunk_tokens: int | None = None,
                  decode_horizon: int = 1,
-                 shard: bool = False, devices=None):
+                 shard: bool = False, devices=None,
+                 faults: FaultPlan | None = None, max_retries: int = 3):
         """Args:
           cfg/params: the (one) model every replica serves — heterogeneity
             is in per-replica capacity, not weights.
@@ -159,6 +242,13 @@ class ClusterRuntime:
             span disjoint meshes), so in-flight migrations ride the
             cross-pool reshard path (``kvcache.reshard_blocks``) instead of
             the free same-pool page handoff — still zero recompute.
+          faults: optional ``serving.faults.FaultPlan`` consulted at each
+            injection site (dispatch, admission, switch) — the
+            deterministic chaos source; see the module docstring's
+            failure-model section for what detection/recovery it drives.
+          max_retries: consecutive transient dispatch failures a replica
+            may accumulate (retried with exponential backoff) before it is
+            declared dead and its requests are recovered onto survivors.
         """
         if total_chips is None:
             if orch is None:
@@ -213,6 +303,19 @@ class ClusterRuntime:
         # ``results``)
         self.shed_rids: list[int] = []
         self._span_shed_mark = 0
+        # fault tolerance
+        self.faults = faults
+        self.max_retries = max_retries
+        self.request_log: dict[int, _RequestLog] = {}
+        self.dead_replicas: list[int] = []    # cluster-lifetime death list
+        self.lost_chips = 0                   # chips on dead replicas
+        self._span_dead: list[int] = []
+        self._span_retries = 0
+        self._span_recovery = MigrationReport()
+        self._switch_count = 0                # apply_plan ordinal (1-based)
+        self._switching = False               # mask injection inside switches
+        # last successfully applied plan, for rollback restore
+        self._applied_fractions: list | None = None
 
     # -- replica materialization ----------------------------------------------
 
@@ -271,6 +374,34 @@ class ClusterRuntime:
             off += rc.chips
         return slices
 
+    def _make_handle(self, k: int, rc: ReplicaConfig,
+                     engine: ServingEngine) -> ReplicaHandle:
+        h = ReplicaHandle(k, rc, engine)
+        self._wire_faults(h)
+        return h
+
+    def _wire_faults(self, h: ReplicaHandle) -> None:
+        """Point the engine's admission-site fault hook at the plan (the
+        dispatch/switch sites are consulted by the cluster directly)."""
+        if self.faults is None:
+            return
+
+        def hook(site, h=h):
+            if self._switching or h.dead:
+                return
+            spec = self.faults.admit_fault(self._tick, h.index)
+            if spec is not None:
+                raise InjectedOOM(
+                    f"injected pool-reservation OOM on replica "
+                    f"{h.index} (tick {self._tick})")
+
+        h.engine.fault_hook = hook
+
+    @property
+    def surviving_chips(self) -> int:
+        """Chips still in the planning budget (dead replicas' chips left)."""
+        return self.total_chips - self.lost_chips
+
     @property
     def total_prefill_tokens(self) -> int:
         """Tokens that went through a prefill forward anywhere in the
@@ -295,7 +426,12 @@ class ClusterRuntime:
     def apply_plan(self, plan) -> SwitchReport:
         """Materialize a span plan (``SpanPlan`` or anything with
         ``.deployment`` + ``.fractions``); executes the deployment switch on
-        live engines when the configuration changed."""
+        live engines when the configuration changed.
+
+        Transactional (see the module docstring): new engines are built
+        before any live engine is touched, and a failure mid-commit rolls
+        the cluster back onto the old deployment — the returned report says
+        ``rolled_back=True`` instead of the switch raising half-done."""
         new_rcs = list(plan.deployment.replicas)
         self.n_types = len(plan.fractions[0]) if plan.fractions else 1
         if len(self._span_type_counts) != self.n_types:
@@ -305,12 +441,17 @@ class ClusterRuntime:
         # replica whose config is unchanged must ALSO keep its device slice
         # (an earlier replica growing/shrinking shifts everyone behind it)
         slices = self._carve(new_rcs) if self.shard else None
+        old_devices = dict(self._replica_devices)
+        # a dead replica always counts as changed: its engine is gone and
+        # must be rebuilt (its requests were already recovered at death)
         changed = [k for k in range(len(new_rcs))
                    if k >= len(old) or old[k].rc != new_rcs[k]
+                   or old[k].dead
                    or (self.shard
                        and self._replica_devices.get(k) != slices[k])]
-        torn_down = [old[k] for k in changed if k < len(old)]
-        torn_down += old[len(new_rcs):]            # shrink: dropped replicas
+        torn_down = [old[k] for k in changed
+                     if k < len(old) and not old[k].dead]
+        torn_down += [h for h in old[len(new_rcs):] if not h.dead]
 
         # 0) fail fast, before touching any engine: every request that may
         #    need migration must fit some replica of the new deployment
@@ -337,26 +478,61 @@ class ClusterRuntime:
                 f"enough to resume them; re-plan or drain first (no engine "
                 f"state was modified)")
 
+        self._switch_count += 1
+        self._switching = True
+        try:
+            return self._apply_txn(plan, new_rcs, old, slices, old_devices,
+                                   changed, torn_down)
+        finally:
+            self._switching = False
+
+    def _apply_txn(self, plan, new_rcs, old, slices, old_devices, changed,
+                   torn_down) -> SwitchReport:
+        fault = (self.faults.switch_fault(self._switch_count)
+                 if self.faults is not None else None)
+
+        # PREPARE: build every new engine before a single live engine is
+        # touched — a build failure aborts with the deployment unchanged
+        built: dict[int, ServingEngine] = {}
+        try:
+            if fault is not None and fault.kind == "switch_build":
+                raise TransientDispatchError(
+                    f"injected engine-build failure "
+                    f"(switch {self._switch_count})")
+            for k in changed:
+                built[k] = self._build_engine(
+                    new_rcs[k], slices[k] if self.shard else None)
+        except Exception as e:   # noqa: BLE001 — the abort must never wedge
+            report = SwitchReport([], 0, 0, 0, rolled_back=True,
+                                  failure=f"prepare: {e}")
+            self._revert_orchestrator()
+            self.switch_reports.append(report)
+            return report
+
         # 1) drain window: short in-flight sequences finish on their source
         drained = 0
         migrate: list[InflightSnapshot] = []
+        origin: dict[int, ReplicaHandle] = {}     # rid -> source handle
         for h in torn_down:
             h.engine.pause_admission()
             for r in h.engine.drain(self.drain_steps):
-                self._record_finish(r)
+                self._record_finish(r, owner=h)
                 drained += 1
             # 2) snapshot what's left *keeping the pages*: the sequences'
             #    KV stays resident in the shared pool across the rebuild
-            migrate.extend(h.engine.export_inflight(release=False))
+            snaps = h.engine.export_inflight(release=False)
+            for s in snaps:
+                self._log_tokens(s.rid, s.generated)
+                origin[s.rid] = h
+            migrate.extend(snaps)
             self._prefill_tokens_retired += h.engine.prefill_tokens
             self.shed_rids.extend(h.engine.shed_rids)
             h.engine.release_all()
 
-        # 3) rebuild changed replicas under the new configuration
+        # COMMIT: 3) install the new handles and routing
         self.replicas = [
             old[k] if k not in changed and k < len(old)
-            else ReplicaHandle(k, new_rcs[k], self._build_engine(
-                new_rcs[k], slices[k] if self.shard else None))
+            else self._make_handle(k, new_rcs[k], built[k])
             for k in range(len(new_rcs))
         ]
         if self.shard:
@@ -369,34 +545,113 @@ class ClusterRuntime:
         #    device copy, then re-prefill.  Routing is capacity-masked: a
         #    snapshot only goes to a replica whose context ceiling can hold
         #    it (heterogeneous replicas differ here).
-        by_dest: dict[int, list[InflightSnapshot]] = {}
-        for snap in migrate:
-            ctx = len(snap.prompt) + len(snap.generated)
-            remaining = snap.max_new_tokens - len(snap.generated)
-            k = self._route(self.rid_type.get(snap.rid, 0), ctx, remaining)
-            if k < 0:   # unreachable: the pre-check above already validated
-                raise RuntimeError(
-                    f"request {snap.rid} unplaceable despite pre-check")
-            by_dest.setdefault(k, []).append(snap)
-            self.rid_owner[snap.rid] = k
         mig = MigrationReport()
-        for k, group in sorted(by_dest.items()):
-            mig.merge(migrate_batch(self.replicas[k].engine, group))
+        try:
+            by_dest, dropped = self._route_snapshots(migrate)
+            mig.dropped += len(dropped)
+            groups = sorted(by_dest.items())
+            inject = fault is not None and fault.kind == "switch_migrate"
+            for gi, (k, group) in enumerate(groups):
+                if inject and gi == min(1, len(groups) - 1):
+                    raise TransientDispatchError(
+                        f"injected migration failure mid-switch "
+                        f"(switch {self._switch_count})")
+                mig.merge(migrate_batch(self.replicas[k].engine, group))
+            if inject and not groups:
+                # the fault is scheduled by apply_plan ordinal: it must fire
+                # even on a switch with nothing to migrate, or a seeded plan
+                # would silently skip its rollback scenario
+                raise TransientDispatchError(
+                    f"injected migration failure mid-switch "
+                    f"(switch {self._switch_count})")
+        except Exception as e:   # noqa: BLE001 — roll back, never wedge
+            return self._rollback_switch(old, old_devices, torn_down,
+                                         origin, migrate, drained, e)
         report = SwitchReport(
             changed, drained, mig.migrated, mig.requeued,
             handoff=mig.handoff, copied=mig.copied,
             reprefilled=mig.reprefilled, pages_handoff=mig.pages_handoff,
             pages_copied=mig.pages_copied,
-            recompute_tokens=mig.recompute_tokens)
+            recompute_tokens=mig.recompute_tokens, dropped=mig.dropped)
+        self.switch_reports.append(report)
+        self._applied_fractions = [list(row) for row in plan.fractions]
+        return report
+
+    def _rollback_switch(self, old, old_devices, torn_down, origin,
+                         exported, drained, err) -> SwitchReport:
+        """Undo a failed commit: pull every request back off the new
+        engines (their pages ride another free handoff), rebuild the old
+        configuration, and restore each request to its origin replica."""
+        # 1) re-export whatever already landed on a new engine; unchanged
+        #    replicas (also present in `old`) keep serving untouched
+        keep = {id(h) for h in old}
+        recovered: list[InflightSnapshot] = []
+        for h in self.replicas:
+            if id(h) in keep:
+                continue
+            recovered.extend(h.engine.export_inflight(release=False))
+            self._prefill_tokens_retired += h.engine.prefill_tokens
+            self.shed_rids.extend(h.engine.shed_rids)
+            h.engine.release_all()
+        # 2) plus everything never restored: exported snapshots whose rid
+        #    did not land on a new engine (adopted snapshots were neutered,
+        #    so matching by rid avoids double-restoring them)
+        got = {s.rid for s in recovered}
+        recovered += [s for s in exported if s.rid not in got]
+        # 3) rebuild the torn-down replicas under their OLD configs; the
+        #    handles (and their span counters) survive, only engines swap
+        for h in torn_down:
+            h.engine = self._build_engine(
+                h.rc, old_devices.get(h.index) if self.shard else None)
+            self._wire_faults(h)
+        self.replicas = list(old)
+        if self.shard:
+            self._replica_devices = old_devices
+        if self._applied_fractions is not None:
+            self.router.reconfigure(self._applied_fractions)
+        # 4) hand every request back to the replica it came from (pages
+        #    were kept throughout, so the return trip is free again)
+        rb = MigrationReport()
+        by_origin: dict[int, list[InflightSnapshot]] = {}
+        index_map = {h.index: h for h in old}
+        for s in recovered:
+            h = origin.get(s.rid)
+            if h is None or h.dead:        # no origin to return to: shed
+                release_snapshot_pages(s)
+                self.shed_rids.append(s.rid)
+                rb.dropped += 1
+                continue
+            by_origin.setdefault(h.index, []).append(s)
+            self.rid_owner[s.rid] = h.index
+        for k, group in sorted(by_origin.items()):
+            rb.merge(migrate_batch(index_map[k].engine, group))
+        self._revert_orchestrator()
+        report = SwitchReport([], drained, rb.migrated, rb.requeued,
+                              handoff=rb.handoff, copied=rb.copied,
+                              reprefilled=rb.reprefilled,
+                              pages_handoff=rb.pages_handoff,
+                              pages_copied=rb.pages_copied,
+                              recompute_tokens=rb.recompute_tokens,
+                              dropped=rb.dropped,
+                              rolled_back=True, failure=f"commit: {err}")
         self.switch_reports.append(report)
         return report
+
+    def _revert_orchestrator(self) -> None:
+        """Point the orchestrator's deployment state back at what the
+        cluster actually runs after an aborted/rolled-back switch, so the
+        next ``plan_span`` prices switches from reality."""
+        if self.orch is not None:
+            self.orch.on_switch_rollback(
+                tuple(h.rc for h in self.replicas if not h.dead))
 
     # -- request flow -----------------------------------------------------------
 
     def _route(self, type_id: int, ctx_len: int, new_tokens: int) -> int:
-        """Pick an admitting replica whose context ceiling fits the request;
-        -1 when no replica can ever serve it (router state untouched)."""
-        up = np.array([h.engine.admitting
+        """Pick a live, admitting replica whose context ceiling fits the
+        request; -1 when no replica can ever serve it (router state
+        untouched)."""
+        up = np.array([not h.dead and h.engine.admitting
                        and h.engine.fits(ctx_len, new_tokens)
                        for h in self.replicas])
         if not up.any():
@@ -406,13 +661,16 @@ class ClusterRuntime:
         return self.router.route(type_id, up)
 
     def submit(self, rid: int, prompt: np.ndarray, max_new_tokens: int,
-               type_id: int = 0, ttft_deadline: float | None = None) -> int:
+               type_id: int = 0, ttft_deadline: float | None = None,
+               tpot_deadline: float | None = None) -> int:
         """Route one typed request to a replica; returns the replica index.
 
         ``ttft_deadline`` (absolute, engine clock) arms SLO-aware shedding:
         the destination replica rejects the request if the deadline passes
-        before its prefill starts (counted in ``load_stats`` /
-        ``finish_span``)."""
+        before its prefill starts.  ``tpot_deadline`` (seconds per output
+        token) arms the decode-side counterpart: a request whose average
+        token pace blows the budget is shed mid-flight.  Both are counted
+        in ``load_stats`` / ``finish_span``."""
         if not self.replicas:
             raise RuntimeError("no deployment applied yet (call apply_plan)")
         k = self._route(type_id, len(prompt), max_new_tokens)
@@ -421,18 +679,47 @@ class ClusterRuntime:
                 f"request {rid}: context {len(prompt)} + {max_new_tokens} "
                 f"new tokens exceeds every replica's context ceiling")
         self.replicas[k].engine.submit(rid, prompt, max_new_tokens,
-                                       ttft_deadline=ttft_deadline)
+                                       ttft_deadline=ttft_deadline,
+                                       tpot_deadline=tpot_deadline)
         # book-keep only after the engine accepted the request, so rejected
         # submissions don't pollute the observed-rate feedback
         self.rid_type[rid] = type_id
         if type_id < self.n_types:
             self._span_type_counts[type_id] += 1
         self.rid_owner[rid] = k
+        self.request_log[rid] = _RequestLog(
+            np.asarray(prompt, np.int32), max_new_tokens, [],
+            ttft_deadline=ttft_deadline, tpot_deadline=tpot_deadline)
         return k
 
-    def _record_finish(self, r: EngineRequest) -> None:
+    def _record_finish(self, r: EngineRequest,
+                       owner: ReplicaHandle | None = None) -> None:
         self.results[r.rid] = r
         self._span_completed += 1
+        if owner is not None:
+            owner.completed_span += 1
+        self._log_tokens(r.rid, r.generated)
+
+    # -- request log (last-resort recovery source) ------------------------------
+
+    def _log_tokens(self, rid: int, generated: list) -> None:
+        lg = self.request_log.get(rid)
+        if lg is not None:
+            lg.emitted[:] = list(generated)
+
+    def _sync_log(self, eng: ServingEngine) -> None:
+        """Top up the host-side token log after a replica's sync phase: the
+        log must always hold every token the cluster has seen, because a
+        later untrusted-pages failure rebuilds requests purely from it."""
+        for r in eng.active.values():
+            self._log_tokens(r.rid, r.generated)
+
+    def _snapshot_from_log(self, rid: int) -> InflightSnapshot:
+        lg = self.request_log[rid]
+        return InflightSnapshot(rid, lg.prompt, list(lg.emitted),
+                                lg.max_new_tokens,
+                                deadline=lg.ttft_deadline,
+                                tpot=lg.tpot_deadline)
 
     def step(self) -> list[EngineRequest]:
         """One cluster tick: step every replica that has work (round-robin).
@@ -444,11 +731,23 @@ class ClusterRuntime:
         replica i+1, so the transfers and the host-side scheduling overlap
         the queued device work (shared-pool replicas' device compute still
         chains through the pool arrays — see the module docstring).
+
+        Failure handling (see the module docstring's failure model): a
+        ``ReplicaCrash`` at dispatch kills the replica and recovers its
+        requests onto survivors; other dispatch errors (transient faults,
+        admission OOMs) are retried with exponential backoff up to
+        ``max_retries`` consecutive failures; ANY sync-phase error kills
+        the replica with its pages untrusted — the host ``seq_lens``
+        already advanced at dispatch, so a replica that cannot sync is a
+        replica whose device state disagrees with the host — and its
+        requests rebuild from the request log.
         """
         self._tick += 1
         finished: list[EngineRequest] = []
         pending = []
         for h in self.replicas:
+            if h.dead:
+                continue
             eng = h.engine
             busy = len(eng.active)
             h.slot_ticks += busy          # expected: ~1 token / slot / tick
@@ -456,12 +755,36 @@ class ClusterRuntime:
                 continue
             if h.period > 1 and self._tick % h.period:
                 continue                  # injected straggler skips this tick
-            pending.append((h, eng.tokens_out, eng.step_async()))
+            if (self.faults is not None
+                    and self.faults.stalled(self._tick, h.index)):
+                continue                  # injected stall: frozen, no error
+            if self._tick < h.backoff_until:
+                continue                  # backing off after a failure
+            try:
+                if self.faults is not None:
+                    spec = self.faults.dispatch_fault(self._tick, h.index)
+                    if spec is not None:
+                        raise error_for(spec)
+                pend = eng.step_async()
+            except ReplicaCrash as e:
+                self._fail(h, e, trust_pages=not e.lose_pages)
+                continue
+            except (FaultError, MemoryError) as e:
+                self._transient(h, e)
+                continue
+            h.failures = 0
+            pending.append((h, eng.tokens_out, pend))
         for h, t0, pend in pending:
-            for r in h.engine.finish_step(pend):
-                self._record_finish(r)
+            try:
+                done = h.engine.finish_step(pend)
+            except (FaultError, MemoryError) as e:
+                self._fail(h, e, trust_pages=False)
+                continue
+            for r in done:
+                self._record_finish(r, owner=h)
                 finished.append(r)
             h.emitted_span += h.engine.tokens_out - t0
+            self._sync_log(h.engine)
         return finished
 
     @property
@@ -469,13 +792,137 @@ class ClusterRuntime:
         return sum(len(h.engine.waiting) + len(h.engine.active)
                    for h in self.replicas)
 
-    def run_until_idle(self, max_ticks: int = 10_000) -> list[EngineRequest]:
+    def run_until_idle(self, max_ticks: int = 10_000,
+                       strict: bool = True) -> list[EngineRequest]:
+        """Step until no request is waiting or active anywhere.
+
+        Raises ``ClusterHangError`` if ``max_ticks`` is exhausted with
+        requests still pending — a wedged cluster must surface instead of
+        masquerading as completion (``strict=False`` restores the old
+        return-what-finished behavior for callers that poll)."""
         finished = []
         ticks = 0
         while self.pending and ticks < max_ticks:
             finished.extend(self.step())
             ticks += 1
+        if self.pending and strict:
+            stats = [(h.index, len(h.engine.waiting), len(h.engine.active),
+                      "dead" if h.dead else "live") for h in self.replicas]
+            raise ClusterHangError(
+                f"run_until_idle exhausted {max_ticks} ticks with "
+                f"{self.pending} requests still pending; per-replica "
+                f"(index, waiting, active, state): {stats}")
         return finished
+
+    # -- failure detection & recovery -------------------------------------------
+
+    def _transient(self, h: ReplicaHandle, err: Exception) -> None:
+        """Bounded retry-with-backoff for dispatch-phase failures."""
+        h.failures += 1
+        self._span_retries += 1
+        if h.failures > self.max_retries:
+            # escalation: repeated failures == dead.  The failures all hit
+            # at dispatch (pre-mutation), so the engine state is consistent
+            # and the pages remain trustworthy.
+            self._fail(h, err, trust_pages=True)
+            return
+        h.backoff_until = self._tick + (1 << (h.failures - 1))
+
+    def fail_replica(self, k: int, lose_pages: bool = False,
+                     reason: str = "operator kill") -> MigrationReport:
+        """Declare replica ``k`` dead (ops/chaos entry point) and recover
+        its requests onto survivors; returns what the recovery did."""
+        return self._fail(self.replicas[k], RuntimeError(reason),
+                          trust_pages=not lose_pages)
+
+    def _fail(self, h: ReplicaHandle, err: Exception,
+              trust_pages: bool) -> MigrationReport:
+        """Declare a replica dead and recover its requests onto survivors.
+
+        ``trust_pages=True`` (the failure hit before dispatch, so engine
+        state is consistent): exported snapshots keep their KV pages and
+        survivors adopt them via handoff / copy / reshard — zero tokens
+        recomputed.  ``trust_pages=False`` (device state lost or out of
+        sync with the host): token snapshots rebuild from the cluster's
+        request log and survivors re-prefill — zero emitted tokens lost
+        either way.  Requests no survivor can hold are shed, never wedged.
+        The dead handle stays in ``replicas`` (masked everywhere) until
+        the next ``apply_plan`` rebuilds or drops it.
+        """
+        if h.dead:
+            return MigrationReport()
+        h.dead = True
+        self._span_dead.append(h.index)
+        self.dead_replicas.append(h.index)
+        self.lost_chips += h.rc.chips
+        eng = h.engine
+        if trust_pages:
+            snaps = eng.export_inflight(release=False)
+            for s in snaps:
+                self._log_tokens(s.rid, s.generated)
+        else:
+            rids = ([r.rid for r in eng.active.values()]
+                    + [r.rid for r in eng.waiting])
+            # allocator accounting is host-side and still sound: hand every
+            # block back, then rebuild purely from the host token log
+            eng.release_all()
+            snaps = [self._snapshot_from_log(rid) for rid in rids]
+        # fold the dead engine's counters into the cluster totals exactly
+        # once (the handle stays visible until the next apply_plan)
+        self.shed_rids.extend(eng.shed_rids)
+        eng.shed_rids = []
+        h.shed_mark = 0
+        self._prefill_tokens_retired += eng.prefill_tokens
+        eng.prefill_tokens = 0
+        eng.pause_admission()
+        if self.shard:
+            gone = set(self._replica_devices.pop(h.index, ()))
+            if gone:
+                self.devices = [d for d in self.devices if d not in gone]
+        rep = self._recover(snaps)
+        self._span_recovery.merge(rep)
+        return rep
+
+    def _recover(self, snaps: list[InflightSnapshot]) -> MigrationReport:
+        """Restore a dead replica's requests on survivors, cheapest path
+        first (the same migration machinery planned switches use)."""
+        rep = MigrationReport()
+        if not snaps:
+            return rep
+        by_dest, dropped = self._route_snapshots(snaps)
+        rep.dropped += len(dropped)
+        for k, group in sorted(by_dest.items()):
+            rep.merge(migrate_batch(self.replicas[k].engine, group))
+        return rep
+
+    def _route_snapshots(self, snaps: list[InflightSnapshot]
+                         ) -> tuple[dict[int, list[InflightSnapshot]],
+                                    list[int]]:
+        """Route exported snapshots to live replicas that can hold them,
+        grouped per destination; unplaceable ones are released and shed
+        (returned as the dropped rid list) — degrade, never wedge."""
+        by_dest: dict[int, list[InflightSnapshot]] = {}
+        dropped: list[int] = []
+        for s in snaps:
+            ctx = len(s.prompt) + len(s.generated)
+            remaining = s.max_new_tokens - len(s.generated)
+            if remaining < 1:
+                # the log already holds the full output: finish it here
+                release_snapshot_pages(s)
+                self._record_finish(EngineRequest(
+                    s.rid, np.asarray(s.prompt, np.int32),
+                    s.max_new_tokens, generated=list(s.generated),
+                    done=True))
+                continue
+            k = self._route(self.rid_type.get(s.rid, 0), ctx, remaining)
+            if k < 0:
+                release_snapshot_pages(s)
+                self.shed_rids.append(s.rid)
+                dropped.append(s.rid)
+                continue
+            by_dest.setdefault(k, []).append(s)
+            self.rid_owner[s.rid] = k
+        return by_dest, dropped
 
     # -- observation / feedback -------------------------------------------------
 
@@ -485,34 +932,67 @@ class ClusterRuntime:
         self.replicas[k].period = max(1, int(round(1.0 / max(fraction, 1e-6))))
 
     def load_stats(self) -> list[dict]:
-        return [h.engine.load_stats() for h in self.replicas]
+        stats = []
+        for h in self.replicas:
+            d = h.engine.load_stats()
+            d["dead"] = h.dead
+            stats.append(d)
+        return stats
 
     def finish_span(self) -> SpanReport:
         """Close the span: report achieved/expected throughput per replica
-        and realized per-type rates back to the orchestrator."""
+        and realized per-type rates back to the orchestrator.
+
+        Dead replicas score 0.  A live replica that shed requests this
+        span (TTFT or TPOT SLO misses) has its achieved fraction scaled by
+        completed/(completed+shed): persistent SLO pressure shrinks the
+        capacity the next assignment gives it, the same feedback channel a
+        straggler's low token throughput uses.  When replicas died this
+        span, their chips leave the planning budget via
+        ``Orchestrator.observe_failures`` so the next ``plan_span``
+        re-solves over the survivors."""
         achieved = []
         for h in self.replicas:
+            if h.dead:
+                achieved.append(0.0)
+                continue
             if h.slot_ticks == 0:
-                achieved.append(1.0)     # idle replica: no evidence of harm
+                base = 1.0               # idle replica: no evidence of harm
             else:
-                achieved.append(min(1.0, h.emitted_span / h.slot_ticks))
+                base = min(1.0, h.emitted_span / h.slot_ticks)
+            shed_h = len(h.engine.shed_rids) - h.shed_mark
+            if shed_h > 0:
+                served = h.completed_span
+                base *= served / (served + shed_h)
+            achieved.append(base)
         span_shed = self.total_shed - self._span_shed_mark
         self._span_shed_mark = self.total_shed
         report = SpanReport(achieved, [h.emitted_span for h in self.replicas],
                             self._span_completed,
-                            self._span_type_counts.copy(), shed=span_shed)
+                            self._span_type_counts.copy(), shed=span_shed,
+                            dead_replicas=list(self._span_dead),
+                            retries=self._span_retries,
+                            recovery=self._span_recovery)
         if self.orch is not None:
             self.orch.observe_health(achieved)
             self.orch.observe_rates(self._span_type_counts)
+            if self._span_dead:
+                self.orch.observe_failures(self._span_dead,
+                                           self.surviving_chips)
             # what a switch decided *now* would have to migrate; with one
             # shared pool migrations ride the free page-handoff path, while
             # per-replica sharded pools pay the page-movement cost
-            lens = [c for h in self.replicas
+            lens = [c for h in self.replicas if not h.dead
                     for c in h.engine.inflight_context_lens()]
             self.orch.observe_inflight(lens, shared_pool=not self.shard)
         for h in self.replicas:
             h.slot_ticks = 0
             h.emitted_span = 0
+            h.completed_span = 0
+            h.shed_mark = len(h.engine.shed_rids)
         self._span_completed = 0
         self._span_type_counts = np.zeros(self.n_types)
+        self._span_dead = []
+        self._span_retries = 0
+        self._span_recovery = MigrationReport()
         return report

@@ -134,6 +134,11 @@ class EngineRequest:
     # SLO shedding: absolute TTFT deadline (engine clock); a waiting request
     # whose deadline has passed is rejected before prefill ever starts
     deadline: float | None = None
+    # SLO shedding, decode side: per-token pace budget (seconds/token) and
+    # the first-token timestamp it is measured from; a mid-flight request
+    # whose average pace exceeds the budget is shed (see ``_shed_slow``)
+    tpot_budget: float | None = None
+    t_first: float | None = None
 
     @property
     def prefill_tokens(self) -> np.ndarray:
@@ -172,6 +177,7 @@ class InflightSnapshot:
     ssm: jax.Array | None = None     # [L, ...] this sequence's SSM state row
     conv: jax.Array | None = None
     deadline: float | None = None    # TTFT deadline, carried across migration
+    tpot: float | None = None        # TPOT pace budget, carried likewise
 
 
 @dataclasses.dataclass
@@ -303,6 +309,11 @@ class ServingEngine:
         # blown while still waiting; ``clock`` is injectable for tests
         self.shed_rids: list[int] = []
         self.clock = time.monotonic
+        # chaos injection: when set, called as ``fault_hook("admit")`` at
+        # the top of the admission path (before any state is mutated) and
+        # may raise (e.g. an injected pool-reservation OOM).  The cluster
+        # wires this to its ``FaultPlan``; standalone engines leave it None.
+        self.fault_hook = None
         # chunked prefill needs per-position resumable state; the SSD scan
         # has none, so SSM/hybrid archs keep the one-shot path
         if prefill_chunk_tokens is not None and cfg.has_ssm:
@@ -421,15 +432,21 @@ class ServingEngine:
                 f"{self._capacity_blocks()} x {self.cache.block_size} tokens")
 
     def submit(self, rid: int, prompt: np.ndarray, max_new_tokens: int,
-               ttft_deadline: float | None = None) -> None:
+               ttft_deadline: float | None = None,
+               tpot_deadline: float | None = None) -> None:
         """Queue a request.  ``ttft_deadline`` (engine-clock absolute time)
         arms SLO-aware shedding: if the deadline passes while the request is
         still waiting, it is rejected instead of admitted (its TTFT budget
-        is already blown, so prefilling it would only waste capacity)."""
+        is already blown, so prefilling it would only waste capacity).
+        ``tpot_deadline`` (seconds per output token) arms the decode-side
+        counterpart: a request whose average token pace, measured from its
+        first token, exceeds the budget is shed mid-flight (its slot and
+        pages go to requests that can still meet their SLO)."""
         prompt = np.asarray(prompt, np.int32)
         self._validate(len(prompt), max_new_tokens, rid)
         self.waiting.append(EngineRequest(rid, prompt, max_new_tokens,
-                                          deadline=ttft_deadline))
+                                          deadline=ttft_deadline,
+                                          tpot_budget=tpot_deadline))
 
     def _free_slots(self) -> list[int]:
         return [s for s in range(self.max_seqs) if s not in self.active]
@@ -481,7 +498,8 @@ class ServingEngine:
                 snaps.append(InflightSnapshot(r.rid, r.prompt,
                                               list(r.generated),
                                               r.max_new_tokens,
-                                              deadline=r.deadline))
+                                              deadline=r.deadline,
+                                              tpot=r.tpot_budget))
                 continue
             ssm_row = (self.cache.ssm[:, slot]
                        if self.cache.ssm is not None else None)
@@ -491,12 +509,14 @@ class ServingEngine:
             snaps.append(InflightSnapshot(
                 r.rid, r.prompt, list(r.generated), r.max_new_tokens,
                 blocks=blocks, seq_len=seq_len, pool=self.cache.pool,
-                ssm=ssm_row, conv=conv_row, deadline=r.deadline))
+                ssm=ssm_row, conv=conv_row, deadline=r.deadline,
+                tpot=r.tpot_budget))
         for r in self.waiting:
             snaps.append(InflightSnapshot(r.rid, r.prompt,
                                           list(r.generated),
                                           r.max_new_tokens,
-                                          deadline=r.deadline))
+                                          deadline=r.deadline,
+                                          tpot=r.tpot_budget))
         self.waiting = []
         return snaps
 
@@ -572,8 +592,12 @@ class ServingEngine:
                     self._local(s.conv))
             r = EngineRequest(s.rid, np.asarray(s.prompt, np.int32),
                               s.max_new_tokens, slot=slot,
-                              generated=list(s.generated))
+                              generated=list(s.generated),
+                              tpot_budget=s.tpot)
             r.prefill_pos = len(r.prefill_tokens)   # prefix already in pages
+            # the pace clock restarts on the adopting engine: migration
+            # stall is accounted to the switch, not to this request's TPOT
+            r.t_first = self.clock()
             self.active[slot] = r
             # this engine owns the pages now: neuter the snapshot so a later
             # release cannot double-free them
@@ -593,7 +617,8 @@ class ServingEngine:
         for s in snaps:
             if not s.generated:          # never prefilled: plain submission
                 self.submit(s.rid, s.prompt, s.max_new_tokens,
-                            ttft_deadline=s.deadline)
+                            ttft_deadline=s.deadline,
+                            tpot_deadline=s.tpot)
                 continue
             remaining = s.max_new_tokens - len(s.generated)
             if remaining < 1:
@@ -603,7 +628,8 @@ class ServingEngine:
             self._validate(len(ctx), remaining, s.rid)
             self.waiting.append(EngineRequest(
                 s.rid, np.asarray(s.prompt, np.int32), s.max_new_tokens,
-                generated=list(s.generated), ctx=ctx))
+                generated=list(s.generated), ctx=ctx,
+                tpot_budget=s.tpot))
 
     def release_all(self) -> None:
         """Teardown: hand every block back to the (shared) pool."""
@@ -658,6 +684,8 @@ class ServingEngine:
         admitted = []
         if not self.admitting:
             return admitted
+        if self.fault_hook is not None:
+            self.fault_hook("admit")
         self._shed_blown()
         free = self._free_slots()
         while self.waiting and free:
@@ -687,7 +715,9 @@ class ServingEngine:
                 logits, cache = self._prefill(self.params, jnp.asarray(toks))
             first = self._pick(logits)           # one sync per prefill group
             self.prefill_tokens += pl * len(group)
+            t_first = self.clock()
             for i, r in enumerate(group):
+                r.t_first = t_first
                 if self.cfg.has_attn:
                     self.cache.write_prefill(r.slot, cache.k[:, i],
                                              cache.v[:, i])
@@ -754,6 +784,7 @@ class ServingEngine:
             r.prefill_pos = start + n_valid
             if r.prefill_pos >= len(toks_all):   # final chunk emits token 1
                 first = self._pick(logits)
+                r.t_first = self.clock()
                 r.generated.append(int(first[0]))
                 self.tokens_out += 1
 
@@ -932,13 +963,35 @@ class ServingEngine:
             self._run_decode_dense(decode_slots)
         return None
 
+    def _shed_slow(self) -> None:
+        """TPOT-aware mid-flight shedding: release active requests whose
+        average decode pace (measured from their first token) has blown
+        their per-token budget — their SLO is already lost, so the slot and
+        pages go to requests that can still meet theirs.  Shed after retire,
+        so a request that just produced its final token always completes."""
+        if not any(r.tpot_budget is not None for r in self.active.values()):
+            return
+        now = self.clock()
+        for s in list(self.active):
+            r = self.active[s]
+            if (r.tpot_budget is None or r.t_first is None
+                    or len(r.generated) < 2):
+                continue
+            pace = (now - r.t_first) / (len(r.generated) - 1)
+            if pace > r.tpot_budget:
+                self.shed_rids.append(r.rid)
+                self.cache.release_slot(s)
+                del self.active[s]
+
     def finish_step(self, pending: PendingDecode | None
                     ) -> list[EngineRequest]:
-        """Sync a dispatched step (one device→host token transfer) and
-        retire finished requests."""
+        """Sync a dispatched step (one device→host token transfer), retire
+        finished requests, and shed TPOT-blown ones."""
         if pending is not None:
             self._finish_decode(pending)
-        return self._retire()
+        done = self._retire()
+        self._shed_slow()
+        return done
 
     def step(self) -> list[EngineRequest]:
         """One synchronous scheduler iteration; returns requests finished

@@ -50,6 +50,10 @@ class MigrationReport:
     pages_handoff: int = 0      # pages transferred by accounting only
     pages_copied: int = 0       # pages physically moved between pools
     recompute_tokens: int = 0   # context tokens the fallback re-prefills
+    # failure recovery only: requests no survivor could hold, released and
+    # shed instead of wedging the cluster (never set by planned switches,
+    # whose stranding pre-check runs before any engine is touched)
+    dropped: int = 0
 
     @property
     def migrated(self) -> int:

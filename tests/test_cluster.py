@@ -18,7 +18,8 @@ import pytest
 from repro.configs import get_config, get_smoke_config
 from repro.core.costmodel import CostModel
 from repro.core.orchestrator import Orchestrator, OrchestratorConfig
-from repro.core.types import ClusterSpec, H100_SPEC, WorkloadType
+from repro.core.types import (ClusterSpec, Deployment, H100_SPEC,
+                              ReplicaConfig, WorkloadType)
 from repro.models import init_params
 from repro.serving.cluster import ClusterRuntime
 from repro.serving.engine import ServingEngine
@@ -372,6 +373,95 @@ def test_simulator_driver_reports_health():
     assert pol.orch.health is not None          # driver fed observe_health
     assert len(pol.orch.health) == pol.orch.current.dp
     assert np.all(pol.orch.health > 0)
+
+
+# ---------------------------------------------------------------------------
+# Drain-window / mid-span edge cases around switches and removals.
+# ---------------------------------------------------------------------------
+
+
+class _ManualPlan:
+    def __init__(self, rcs, fractions):
+        self.deployment = Deployment(tuple(rcs))
+        self.fractions = fractions
+
+
+def _manual_cluster(cfg, params, **kw):
+    kw.setdefault("drain_steps", 1)
+    rt = ClusterRuntime(cfg, params, total_chips=4, blocks_per_chip=32,
+                        seqs_per_chip=4, block_size=8,
+                        router=FlowRouter([[0.5], [0.5]]), **kw)
+    rt.apply_plan(_ManualPlan([ReplicaConfig(1, 1), ReplicaConfig(1, 1)],
+                              [[0.5], [0.5]]))
+    return rt
+
+
+def test_submit_during_paused_admission_stays_queued(cfg_params):
+    """A request that arrives while admission is paused (a switch is in
+    progress) queues — it is neither lost nor admitted early — and the
+    cluster routes around the paused replica."""
+    cfg, params = cfg_params
+    rt = _manual_cluster(cfg, params)
+    prompt = np.arange(8, dtype=np.int32)
+    rt.replicas[0].engine.pause_admission()
+    # cluster-level: routing masks the paused replica
+    for rid in range(3):
+        assert rt.submit(rid, prompt, 4) == 1
+    # engine-level: a direct submit to the paused engine queues, and two
+    # steps later it is still queued, untouched
+    rt.replicas[0].engine.submit(90, prompt, 4)
+    rt.step(); rt.step()
+    assert [r.rid for r in rt.replicas[0].engine.waiting] == [90]
+    assert not rt.replicas[0].engine.active
+    rt.replicas[0].engine.resume_admission()
+    done = rt.run_until_idle()
+    assert {r.rid for r in done} == {0, 1, 2, 90}
+
+
+def test_switch_where_drain_window_empties_migration(cfg_params):
+    """When every in-flight request finishes inside the drain window the
+    switch migrates nothing — and must still complete cleanly."""
+    cfg, params = cfg_params
+    rt = _manual_cluster(cfg, params, drain_steps=16)
+    expected = {}
+    eng = ServingEngine(cfg, params, num_blocks=256, block_size=8, max_seqs=8)
+    rng = np.random.RandomState(3)
+    for rid in range(4):
+        p = rng.randint(0, cfg.vocab_size, 8).astype(np.int32)
+        rt.submit(rid, p, 4)
+        eng.submit(rid, p, 4)
+    expected = {r.rid: r.generated for r in eng.run_to_completion()}
+    rt.step()                       # everything mid-flight, 3 tokens to go
+    # both replicas change config, so both must drain (and fully succeed)
+    sw = rt.apply_plan(_ManualPlan([ReplicaConfig(2, 1), ReplicaConfig(2, 1)],
+                                   [[0.5], [0.5]]))
+    assert sw.drained == 4
+    assert sw.migrated == 0 and sw.requeued == 0 and sw.moved == 0
+    assert rt.pending == 0
+    assert {r: rt.results[r].generated for r in rt.results} == expected
+
+
+def test_router_routes_only_to_survivors_after_removal(cfg_params):
+    """After a replica is removed mid-span, every new request lands on a
+    survivor and the cluster still drains to idle."""
+    cfg, params = cfg_params
+    rt = _manual_cluster(cfg, params)
+    prompt = np.arange(8, dtype=np.int32)
+    k = rt.submit(0, prompt, 6)
+    rt.step()
+    rep = rt.fail_replica(k, reason="mid-span removal")
+    surv = 1 - k
+    assert rt.load_stats()[k]["dead"]
+    assert rep.migrated == 1          # rid 0 moved to the survivor, mid-flight
+    for rid in range(1, 6):
+        assert rt.submit(rid, prompt, 4) == surv, \
+            "router sent a request to a dead replica"
+    rt.run_until_idle()
+    assert rt.pending == 0
+    assert set(rt.results) | set(rt.all_shed_rids) == set(range(6))
+    span = rt.finish_span()
+    assert span.dead_replicas == [k]
+    assert span.achieved_fraction[k] == 0.0
 
 
 # ---------------------------------------------------------------------------

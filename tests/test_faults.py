@@ -1,0 +1,423 @@
+"""Chaos tests: injected faults, replica-failure recovery, transactional
+switches with rollback, TPOT shedding, and hang surfacing.
+
+The acceptance bar (ISSUE 6): under a seeded fault plan injecting a replica
+crash mid-decode, a stall, and a failed switch (rollback path), every
+non-shed request completes with greedy token parity vs a fault-free run,
+zero emitted tokens are lost, and the Switch/Span reports account the
+recoveries.  Everything here runs on the CPU smoke model; the `chaos`
+marker lets CI run the matrix as its own job.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, get_smoke_config
+from repro.core.costmodel import CostModel
+from repro.core.orchestrator import Orchestrator, OrchestratorConfig
+from repro.core.types import (ClusterSpec, Deployment, H100_SPEC,
+                              ReplicaConfig, WorkloadType)
+from repro.models import init_params
+from repro.serving.cluster import ClusterHangError, ClusterRuntime
+from repro.serving.engine import ServingEngine
+from repro.serving.faults import (FaultPlan, FaultSpec, InjectedOOM,
+                                  ReplicaCrash, TransientDispatchError)
+from repro.serving.router import FlowRouter
+
+pytestmark = pytest.mark.chaos
+
+ARCH = [WorkloadType(1275, 287), WorkloadType(139, 133),
+        WorkloadType(1181, 1824), WorkloadType(282, 1121)]
+
+
+def ws(rates):
+    return [a.with_rate(float(r)) for a, r in zip(ARCH, rates)]
+
+
+@pytest.fixture(scope="module")
+def cfg_params():
+    cfg = get_smoke_config("yi-9b")
+    params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    return cfg, params
+
+
+def _orchestrator(chips: int) -> Orchestrator:
+    cm = CostModel(get_config("opt-30b").profile(), hw=H100_SPEC)
+    return Orchestrator(cm, ClusterSpec(chips, hw=H100_SPEC),
+                        OrchestratorConfig(search_patience=10))
+
+
+class _Plan:
+    """Minimal stand-in for SpanPlan in manual (orchestrator-less) tests."""
+
+    def __init__(self, rcs, fractions):
+        self.deployment = Deployment(tuple(rcs))
+        self.fractions = fractions
+
+
+def _jobs(cfg, n=8, seed=7):
+    rng = np.random.RandomState(seed)
+    return [(rng.randint(0, cfg.vocab_size, 6 + (i % 3) * 2).astype(np.int32),
+             6 + (i % 4)) for i in range(n)]
+
+
+@pytest.fixture(scope="module")
+def reference(cfg_params):
+    """Fault-free greedy reference for the shared job set."""
+    cfg, params = cfg_params
+    eng = ServingEngine(cfg, params, num_blocks=256, block_size=8, max_seqs=8)
+    for rid, (p, n) in enumerate(_jobs(cfg)):
+        eng.submit(rid, p, n)
+    return {r.rid: list(r.generated) for r in eng.run_to_completion()}
+
+
+def _two_replica_runtime(cfg, params, faults, **kw):
+    rt = ClusterRuntime(cfg, params, total_chips=4, blocks_per_chip=32,
+                        seqs_per_chip=4, block_size=8, drain_steps=1,
+                        router=FlowRouter([[0.5], [0.5]]), faults=faults,
+                        **kw)
+    rt.apply_plan(_Plan([ReplicaConfig(1, 1), ReplicaConfig(1, 1)],
+                        [[0.5], [0.5]]))
+    return rt
+
+
+def _assert_all_complete_with_parity(rt, reference, n=8):
+    """Every non-shed request finished with exactly the fault-free tokens
+    (which also proves zero emitted tokens were lost)."""
+    shed = set(rt.all_shed_rids)
+    for rid in range(n):
+        if rid in shed:
+            continue
+        assert rid in rt.results, f"rid {rid} neither finished nor shed"
+        assert rt.results[rid].generated == reference[rid], \
+            f"rid {rid} diverged from the fault-free run"
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: seeded plan with a mid-decode crash + a stall + a failed
+# switch (rollback), through the full Orchestrator -> ClusterRuntime loop.
+# ---------------------------------------------------------------------------
+
+
+def test_chaos_parity_crash_stall_failed_switch(cfg_params):
+    cfg, params = cfg_params
+    orch = _orchestrator(6)
+    plan0 = orch.plan_span(ws([5, 300, 2, 3]))
+    dp = plan0.deployment.dp
+    assert dp >= 2, "need >= 2 replicas for crash-with-survivors"
+    rt = ClusterRuntime(cfg, params, orch, blocks_per_chip=16,
+                        seqs_per_chip=2, block_size=8, drain_steps=0)
+    rt.apply_plan(plan0)
+    rng = np.random.RandomState(0)
+    jobs = {}
+    rid = 0
+    span_reports = []
+    switch_reports = [rt.switch_reports[-1]]
+    faults = None
+    for span, rates in enumerate(([5, 300, 2, 3], [40, 10, 60, 40])):
+        if span > 0:
+            plan = orch.plan_span(ws(rates))
+            switch_reports.append(rt.apply_plan(plan))
+        for i in range(6):
+            t = int(rng.randint(0, 4))
+            prompt = rng.randint(0, cfg.vocab_size, 6 + 2 * t).astype(np.int32)
+            jobs[rid] = (prompt, 8 + t)
+            k = rt.submit(rid, prompt, 8 + t, type_id=t)
+            if faults is None:
+                # target the replica that actually got traffic: stall it
+                # for 3 ticks, crash it mid-decode right after, and arm
+                # the span-1 switch to fail mid-migration
+                faults = FaultPlan([
+                    FaultSpec("stall", 3, replica=k, steps=3),
+                    FaultSpec("crash", 6, replica=k),
+                    FaultSpec("switch_migrate", 2),
+                ])
+                rt.faults = faults
+            rid += 1
+            rt.step(); rt.step()
+        if span == 1:
+            rt.run_until_idle()
+        span_reports.append(rt.finish_span())
+
+    # the crash fired mid-decode and its requests were recovered
+    assert faults.fired("crash") == 1
+    dead_spans = [r for r in span_reports if r.dead_replicas]
+    assert dead_spans, "no span accounted the dead replica"
+    rec = dead_spans[0].recovery
+    assert rec.migrated + rec.requeued + rec.dropped >= 1, \
+        "the crashed replica's requests were not recovered"
+    # the span-1 switch failed mid-migration and rolled back
+    rolled = [s for s in switch_reports if s.rolled_back]
+    assert rolled and "injected migration failure" in rolled[0].failure
+    # every non-shed request completed with fault-free greedy parity:
+    # zero emitted tokens lost through crash recovery AND rollback
+    shed = set(rt.all_shed_rids)
+    done = set(rt.results)
+    assert shed | done == set(range(rid)), "requests lost without a trace"
+    ref = ServingEngine(cfg, params, num_blocks=256, block_size=8, max_seqs=12)
+    for r, (prompt, n) in jobs.items():
+        ref.submit(r, prompt, n)
+    expected = {r.rid: r.generated for r in ref.run_to_completion()}
+    for r in sorted(done):
+        assert rt.results[r].generated == expected[r], f"rid {r} diverged"
+        assert len(rt.results[r].generated) == jobs[r][1]
+    # degraded-mode replanning: the dead replica's chips left the budget
+    assert orch.cluster.chips == rt.surviving_chips < rt.total_chips
+
+
+# ---------------------------------------------------------------------------
+# Seeded fault matrix (the CI chaos job): crash-during-decode (pages kept
+# and lost), crash-during-switch, stall, OOM — all complete with parity.
+# ---------------------------------------------------------------------------
+
+
+MATRIX = {
+    "crash-decode": dict(crashes=1, stalls=0),
+    "crash-decode-lose-pages": dict(crashes=1, stalls=0, lose_pages=True),
+    "crash-during-switch": dict(crashes=0, stalls=0,
+                                switch_failure="switch_migrate"),
+    "build-failure": dict(crashes=0, stalls=0,
+                          switch_failure="switch_build"),
+    "stall": dict(crashes=0, stalls=1),
+    "oom": dict(crashes=0, stalls=0, ooms=1),
+}
+
+
+@pytest.mark.parametrize("case", sorted(MATRIX))
+@pytest.mark.parametrize("seed", [11, 23])
+def test_chaos_matrix_seeded(cfg_params, reference, case, seed):
+    cfg, params = cfg_params
+    faults = FaultPlan.seeded(seed, n_replicas=2, horizon_ticks=6,
+                              **MATRIX[case])
+    rt = _two_replica_runtime(cfg, params, faults)
+    for rid, (p, n) in enumerate(_jobs(cfg)):
+        rt.submit(rid, p, n)
+    for _ in range(6):
+        rt.step()
+    # switch ordinal 2: the target of the switch_* faults
+    sw = rt.apply_plan(_Plan([ReplicaConfig(2, 1), ReplicaConfig(1, 1)],
+                             [[0.6], [0.4]]))
+    rt.run_until_idle()
+    rep = rt.finish_span()
+    _assert_all_complete_with_parity(rt, reference)
+    if case.startswith("crash-decode"):
+        assert rep.dead_replicas, "crash did not register a death"
+        if "lose-pages" in case:
+            assert rep.recovery.reprefilled + rep.recovery.requeued >= 1
+            assert rep.recovery.handoff == 0, \
+                "untrusted pages must not be handed off"
+    if case in ("crash-during-switch", "build-failure"):
+        assert sw.rolled_back and sw.failure
+        # the rollback restored the old configuration
+        assert [h.rc for h in rt.replicas] == [ReplicaConfig(1, 1)] * 2
+    if case == "oom":
+        assert rep.retries >= 1, "injected OOM was not retried"
+        assert not rep.dead_replicas, "a transient OOM must not kill"
+
+
+def test_seeded_plans_are_deterministic():
+    a = FaultPlan.seeded(42, n_replicas=3, transients=2, ooms=1,
+                         switch_failure="switch_build")
+    b = FaultPlan.seeded(42, n_replicas=3, transients=2, ooms=1,
+                         switch_failure="switch_build")
+    assert a.faults == b.faults
+    c = FaultPlan.seeded(43, n_replicas=3, transients=2, ooms=1,
+                         switch_failure="switch_build")
+    assert a.faults != c.faults
+
+
+# ---------------------------------------------------------------------------
+# Retry / escalation semantics.
+# ---------------------------------------------------------------------------
+
+
+def test_transient_fault_retries_then_recovers(cfg_params, reference):
+    cfg, params = cfg_params
+    faults = FaultPlan([FaultSpec("transient", 3, replica=0, steps=2)])
+    rt = _two_replica_runtime(cfg, params, faults)
+    for rid, (p, n) in enumerate(_jobs(cfg)):
+        rt.submit(rid, p, n)
+    rt.run_until_idle()
+    rep = rt.finish_span()
+    assert rep.retries == 2
+    assert not rep.dead_replicas, "bounded transients must not kill"
+    assert not rt.all_shed_rids
+    _assert_all_complete_with_parity(rt, reference)
+
+
+def test_repeated_failures_escalate_to_death(cfg_params, reference):
+    cfg, params = cfg_params
+    faults = FaultPlan([FaultSpec("transient", 3, replica=0, steps=50)])
+    rt = _two_replica_runtime(cfg, params, faults, max_retries=3)
+    for rid, (p, n) in enumerate(_jobs(cfg)):
+        rt.submit(rid, p, n)
+    rt.run_until_idle()
+    rep = rt.finish_span()
+    assert rep.dead_replicas == [0]
+    assert rep.retries == 4          # 3 tolerated + the escalating failure
+    assert rep.recovery.migrated + rep.recovery.requeued >= 1
+    _assert_all_complete_with_parity(rt, reference)
+
+
+def test_crash_with_pages_kept_rides_handoff(cfg_params, reference):
+    cfg, params = cfg_params
+    faults = FaultPlan([FaultSpec("crash", 5, replica=0)])
+    rt = _two_replica_runtime(cfg, params, faults)
+    # 6 jobs over 2 replicas of max_seqs=4: the survivor has slot headroom,
+    # so at least one recovered sequence must ride the free handoff path
+    for rid, (p, n) in enumerate(_jobs(cfg, n=6)):
+        rt.submit(rid, p, n)
+    for _ in range(4):
+        rt.step()
+    assert not rt.dead_replicas
+    rt.step()                       # tick 5: the armed crash fires
+    assert rt.dead_replicas == [0]
+    assert rt._span_recovery.handoff >= 1, \
+        "shared-pool crash recovery should hand off at least one sequence"
+    assert rt._span_recovery.pages_handoff >= 1
+    rt.run_until_idle()
+    rep = rt.finish_span()
+    assert rep.dead_replicas == [0]
+    _assert_all_complete_with_parity(rt, reference, n=6)
+
+
+def test_crash_lose_pages_recovers_from_request_log(cfg_params, reference):
+    cfg, params = cfg_params
+    faults = FaultPlan([FaultSpec("crash", 5, replica=0, lose_pages=True)])
+    rt = _two_replica_runtime(cfg, params, faults)
+    for rid, (p, n) in enumerate(_jobs(cfg)):
+        rt.submit(rid, p, n)
+    rt.run_until_idle()
+    rep = rt.finish_span()
+    assert rep.dead_replicas == [0]
+    assert rep.recovery.handoff == 0 and rep.recovery.copied == 0
+    assert rep.recovery.reprefilled + rep.recovery.requeued >= 1
+    # zero emitted tokens lost despite the device state being "gone"
+    _assert_all_complete_with_parity(rt, reference)
+
+
+def test_all_replicas_dead_sheds_instead_of_wedging(cfg_params):
+    cfg, params = cfg_params
+    rt = _two_replica_runtime(cfg, params, None)
+    for rid, (p, n) in enumerate(_jobs(cfg, n=4)):
+        rt.submit(rid, p, n)
+    for _ in range(2):
+        rt.step()
+    rt.fail_replica(0)
+    rt.fail_replica(1)
+    # nothing pending (recovered-then-shed), nothing wedged
+    assert rt.pending == 0
+    rt.run_until_idle()            # returns immediately, no hang
+    shed = set(rt.all_shed_rids)
+    assert shed | set(rt.results) == set(range(4))
+    with pytest.raises(ValueError):
+        rt.submit(99, np.arange(4, dtype=np.int32), 4)
+
+
+# ---------------------------------------------------------------------------
+# run_until_idle hang surfacing (satellite).
+# ---------------------------------------------------------------------------
+
+
+def test_run_until_idle_raises_on_exhaustion(cfg_params):
+    cfg, params = cfg_params
+    faults = FaultPlan([FaultSpec("stall", 1, replica=0, steps=10_000),
+                        FaultSpec("stall", 1, replica=1, steps=10_000)])
+    rt = _two_replica_runtime(cfg, params, faults)
+    rt.submit(0, np.arange(6, dtype=np.int32), 4)
+    with pytest.raises(ClusterHangError, match="still pending"):
+        rt.run_until_idle(max_ticks=15)
+    # strict=False restores the old poll-style behavior
+    assert rt.run_until_idle(max_ticks=5, strict=False) == []
+
+
+# ---------------------------------------------------------------------------
+# TPOT-aware admission (satellite): mid-flight shedding + health feedback.
+# ---------------------------------------------------------------------------
+
+
+def test_engine_tpot_shed_mid_flight(cfg_params):
+    cfg, params = cfg_params
+    eng = ServingEngine(cfg, params, num_blocks=64, block_size=8, max_seqs=4)
+    now = [0.0]
+    eng.clock = lambda: now[0]
+    eng.submit(0, np.arange(8, dtype=np.int32), 12, tpot_deadline=0.5)
+    eng.submit(1, np.arange(8, dtype=np.int32), 12)   # no budget: untouched
+    eng.step()                      # prefill, first tokens, t_first = 0
+    eng.step()                      # second token: pace still 0 -> kept
+    assert len(eng.active) == 2
+    now[0] = 100.0                  # pace blows the 0.5 s/token budget
+    eng.step()
+    assert eng.shed_rids == [0]
+    assert eng.load_stats()["shed"] == 1
+    assert [r.rid for r in eng.active.values()] == [1]
+    done = eng.run_to_completion()
+    assert [r.rid for r in done] == [1]   # the unbudgeted request completes
+
+
+def test_cluster_tpot_shed_counted_and_scales_health(cfg_params):
+    cfg, params = cfg_params
+    rt = _two_replica_runtime(cfg, params, None)
+    now = [0.0]
+    for h in rt.replicas:
+        h.engine.clock = lambda: now[0]
+    k0 = rt.submit(0, np.arange(8, dtype=np.int32), 12, tpot_deadline=0.5)
+    k1 = rt.submit(1, np.arange(8, dtype=np.int32), 12, tpot_deadline=0.5)
+    rt.step(); rt.step()
+    now[0] = 100.0
+    rt.step()
+    assert sorted(rt.all_shed_rids) == [0, 1]
+    rep = rt.finish_span()
+    assert rep.shed == 2
+    # every request those replicas held was shed, none served: achieved
+    # collapses to 0 -> the orchestrator's capacity scaling sees the miss
+    assert rep.achieved_fraction[k0] == 0.0
+    assert rep.achieved_fraction[k1] == 0.0
+    assert rt.pending == 0
+
+
+def test_tpot_budget_survives_migration(cfg_params):
+    cfg, params = cfg_params
+    rt = _two_replica_runtime(cfg, params, None)
+    rt.submit(0, np.arange(8, dtype=np.int32), 16, tpot_deadline=123.0)
+    for _ in range(3):
+        rt.step()
+    rt.apply_plan(_Plan([ReplicaConfig(2, 1), ReplicaConfig(1, 1)],
+                        [[0.6], [0.4]]))
+    carried = [r.tpot_budget
+               for h in rt.replicas
+               for r in (list(h.engine.active.values()) + h.engine.waiting)]
+    assert carried == [123.0]
+
+
+# ---------------------------------------------------------------------------
+# Fault-plan / injection unit checks.
+# ---------------------------------------------------------------------------
+
+
+def test_fault_spec_validation():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultSpec("meteor", 1)
+
+
+def test_dispatch_fault_one_shot_and_budgeted():
+    plan = FaultPlan([FaultSpec("crash", 5, replica=1),
+                      FaultSpec("transient", 2, replica=0, steps=2)])
+    assert plan.dispatch_fault(4, 1) is None          # not armed yet
+    assert plan.dispatch_fault(6, 0).kind == "transient"
+    assert plan.dispatch_fault(6, 0).kind == "transient"
+    assert plan.dispatch_fault(6, 0) is None          # budget exhausted
+    crash = plan.dispatch_fault(7, 1)                 # fires late, once
+    assert crash.kind == "crash"
+    assert plan.dispatch_fault(8, 1) is None
+    assert plan.fired("crash") == 1 and plan.fired("transient") == 2
+
+
+def test_error_mapping():
+    from repro.serving.faults import error_for
+    e = error_for(FaultSpec("crash", 1, lose_pages=True))
+    assert isinstance(e, ReplicaCrash) and e.lose_pages
+    assert isinstance(error_for(FaultSpec("transient", 1)),
+                      TransientDispatchError)
+    assert issubclass(InjectedOOM, MemoryError)
