@@ -2,8 +2,8 @@
 
 CI used to fail benchmarks only when they raised; this script turns the
 numbers themselves into a gate.  The workflow stashes the committed
-``BENCH_engine.json`` / ``BENCH_switch.json`` / ``BENCH_recovery.json``
-before the bench steps overwrite them, then runs::
+``BENCH_engine.json`` / ``BENCH_switch.json`` / ``BENCH_recovery.json`` /
+``BENCH_prefix.json`` before the bench steps overwrite them, then runs::
 
     python benchmarks/check_regression.py \
         --baseline-dir .bench-baseline --fresh-dir .
@@ -14,9 +14,11 @@ committed numbers:
   * **machine-independent ratios** (hard gates): paged decode must beat the
     dense-gather path by a wide margin, the H=8 horizon must keep its >= 2x
     over per-step decode, page handoff must stay >= 5x cheaper than
-    re-prefill, and the zero-recompute invariants (recompute_tokens,
-    restore-path counts) must match the baseline *exactly* — these ratios
-    survive any change of hardware, so a violation is a real regression.
+    re-prefill, the prefix cache must keep cutting prefill-forward tokens
+    >= 5x on the shared-prefix trace, and the zero-recompute invariants
+    (recompute_tokens, restore-path counts, cache hit/miss tallies) must
+    match the baseline *exactly* — these ratios survive any change of
+    hardware, so a violation is a real regression.
   * **absolute numbers vs baseline**, with a wide tolerance band
     (``--tolerance``, default: fresh throughput must reach 20% of baseline;
     ``--stall-tolerance``, default: fresh stalls must stay under 5x
@@ -35,12 +37,14 @@ import sys
 ENGINE_JSON = "BENCH_engine.json"
 SWITCH_JSON = "BENCH_switch.json"
 RECOVERY_JSON = "BENCH_recovery.json"
+PREFIX_JSON = "BENCH_prefix.json"
 
 # machine-independent ratio floors (hard gates)
 PAGED_VS_DENSE_MIN = 10.0       # committed: ~80-250x on CPU smoke
 HORIZON_H8_MIN = 2.0            # CI-asserted in bench_engine too
 HANDOFF_VS_REPREFILL_MIN = 5.0  # CI-asserted in bench_switch too
 RECOVERY_HANDOFF_MIN = 5.0      # CI-asserted in bench_recovery too
+PREFIX_SAVINGS_MIN = 5.0        # CI-asserted in bench_prefix too
 
 
 def _load(d: pathlib.Path, name: str) -> dict:
@@ -175,6 +179,47 @@ def check_recovery(base: dict, fresh: dict, stall_tol: float) -> list[str]:
     return bad
 
 
+def check_prefix(base: dict, fresh: dict, tol: float,
+                 stall_tol: float) -> list[str]:
+    bad: list[str] = []
+    b_rows = _index(base["results"], "mode")
+    f_rows = _index(fresh["results"], "mode")
+    for key, br in sorted(b_rows.items()):
+        fr = f_rows.get(key)
+        if fr is None:
+            bad.append(f"prefix {key[0]}: mode missing from fresh run")
+            continue
+        # cache structure is deterministic (fixed trace, greedy decode):
+        # prefill-forward token counts and hit/miss tallies match exactly
+        for field in ("prefill_tokens", "n_requests", "hits", "misses",
+                      "hit_tokens"):
+            if fr.get(field) != br.get(field):
+                bad.append(f"prefix {key[0]}: {field} = {fr.get(field)} "
+                           f"(baseline {br.get(field)}) — cache attach "
+                           f"path changed")
+        ceil = stall_tol * br["mean_ttft_ms"]
+        ok = fr["mean_ttft_ms"] <= ceil
+        print(f"prefix/{key[0]}: ttft {fr['mean_ttft_ms']:.2f}ms "
+              f"(baseline {br['mean_ttft_ms']:.2f}, ceiling {ceil:.2f}) "
+              f"{'ok' if ok else 'REGRESSED'}")
+        if not ok:
+            bad.append(f"prefix {key[0]}: ttft {fr['mean_ttft_ms']:.2f}ms "
+                       f"> {stall_tol:.1f}x baseline "
+                       f"{br['mean_ttft_ms']:.2f}ms")
+    # machine-independent ratios within the fresh run
+    x = fresh.get("prefill_savings_x", 0.0)
+    print(f"prefix/prefill_savings: {x:.1f}x")
+    if x < PREFIX_SAVINGS_MIN:
+        bad.append(f"prefix: cache only cut prefill tokens {x:.1f}x "
+                   f"(needs >= {PREFIX_SAVINGS_MIN}x)")
+    t = fresh.get("ttft_speedup_x", 0.0)
+    print(f"prefix/ttft_speedup: {t:.2f}x")
+    if t <= 1.0:
+        bad.append(f"prefix: cache-on mean TTFT not under cache-off "
+                   f"({t:.2f}x)")
+    return bad
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline-dir", required=True, type=pathlib.Path,
@@ -198,6 +243,9 @@ def main(argv=None) -> int:
     bad += check_recovery(_load(args.baseline_dir, RECOVERY_JSON),
                           _load(args.fresh_dir, RECOVERY_JSON),
                           args.stall_tolerance)
+    bad += check_prefix(_load(args.baseline_dir, PREFIX_JSON),
+                        _load(args.fresh_dir, PREFIX_JSON),
+                        args.tolerance, args.stall_tolerance)
     if bad:
         print("\nBENCH REGRESSIONS:", file=sys.stderr)
         for b in bad:

@@ -99,6 +99,18 @@ def run_real(args) -> None:
               f"completed {report.completed}/{o.n_requests} | "
               f"health {np.round(report.achieved_fraction, 2)} | "
               f"observed-rate EWMA {np.round(o.observed_rates, 1)}")
+        if report.prefix_hit_rate is not None:
+            rate = np.round(np.nan_to_num(report.prefix_hit_rate), 2)
+            print(f"  prefix cache: hits {report.prefix_hits} / "
+                  f"misses {report.prefix_misses} | "
+                  f"per-type hit rate {rate} | "
+                  f"evicted {report.prefix_evicted_bytes}B / "
+                  f"restored {report.prefix_restored_bytes}B")
+    stats = runtime.load_stats()
+    eff = [s.get("free_blocks_effective") for s in stats]
+    if any(e is not None for e in eff):
+        print(f"  hit-rate-adjusted free capacity (blocks, incl. cold "
+              f"cached pages): {eff}")
     total = args.spans * args.requests_per_span
     done = sum(1 for r in runtime.results.values() if r.done)
     # span 0 is the initial build, not a switch (same convention as

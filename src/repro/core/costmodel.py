@@ -262,7 +262,12 @@ class CostModel:
         if b_eff == 0:
             return ReplicaPerf(math.inf, math.inf, 0, 0.0, False)
         avg_ctx = w.in_len + w.out_len // 2
-        prefill_t = self.measure_prefill(cfg, w.in_len)
+        # Prefix-cache discount: a type whose prompts hit the cache for a
+        # fraction of their tokens only prefills the uncached suffix (the
+        # cached pages attach by refcount — zero compute).  The KV memory
+        # term stays at full total_len: shared pages still occupy HBM.
+        prefill_in = max(1, int(round(w.in_len * (1.0 - w.cached_frac))))
+        prefill_t = self.measure_prefill(cfg, prefill_in)
         decode_t = self.measure_decode_step(cfg, b_eff, avg_ctx)
         # Pipeline bubble: decode across pp stages overlaps across microbatches;
         # with m in-flight microbatch groups, efficiency = m / (m + pp - 1).

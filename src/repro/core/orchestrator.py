@@ -80,6 +80,7 @@ class Orchestrator:
         self.placed: PlacedDeployment | None = None
         self.health: np.ndarray | None = None   # per-replica EWMA in (0, 1]
         self.observed_rates: np.ndarray | None = None  # per-type EWMA
+        self.prefix_hit_rate: np.ndarray | None = None  # per-type EWMA [0, 1]
         self.inflight_lens: list[int] = []      # contexts a switch migrates
         self.inflight_shared_pool: bool = True  # page handoff available?
 
@@ -102,6 +103,28 @@ class Orchestrator:
         else:
             a = self.cfg.ewma_alpha
             self.observed_rates = (1 - a) * self.observed_rates + a * obs
+
+    def observe_prefix_hits(self, hit_rates) -> None:
+        """Per-type prefix-cache hit rates for the last span (EWMA).
+
+        ``hit_rates[j]``: fraction of type j's prompt tokens served from
+        the prefix cache this span (token-weighted).  NaN entries mean the
+        type saw no admissions — their EWMA is left untouched rather than
+        decayed toward zero.  ``plan_span`` feeds the EWMA into
+        ``WorkloadType.cached_frac`` so the cost model discounts per-type
+        prefill compute and steers shared-prefix-heavy types toward
+        replicas whose pools are warm.
+        """
+        obs = np.asarray(hit_rates, float)
+        if (self.prefix_hit_rate is None
+                or len(self.prefix_hit_rate) != len(obs)):
+            self.prefix_hit_rate = np.clip(np.nan_to_num(obs), 0.0, 1.0)
+            return
+        a = self.cfg.ewma_alpha
+        seen = ~np.isnan(obs)
+        blended = ((1 - a) * self.prefix_hit_rate
+                   + a * np.clip(np.nan_to_num(obs), 0.0, 1.0))
+        self.prefix_hit_rate = np.where(seen, blended, self.prefix_hit_rate)
 
     def observe_inflight(self, context_lens: list[int],
                          shared_pool: bool = True) -> None:
@@ -142,6 +165,13 @@ class Orchestrator:
     def plan_span(self, workloads: list[WorkloadType],
                   force: bool = False) -> SpanPlan:
         t0 = time.time()
+        # fold the observed per-type prefix-cache hit rate into the types
+        # before pricing anything: the cost model then discounts prefill
+        # compute for shared-prefix-heavy types (warm-pool steering)
+        if (self.prefix_hit_rate is not None
+                and len(self.prefix_hit_rate) == len(workloads)):
+            workloads = [w.with_cached_frac(float(h))
+                         for w, h in zip(workloads, self.prefix_hit_rate)]
         search = flow_guided_search(
             self.cm, self.cluster.chips, workloads,
             max_tp=self.cfg.max_tp, max_pp=self.cfg.max_pp,
@@ -243,6 +273,29 @@ class Orchestrator:
         if self.health is not None:
             keep = [a for i, a in enumerate(self.health) if i not in dead]
             self.health = np.asarray(keep) if keep else None
+
+    def observe_rejoin(self, live_replicas: tuple, surviving_chips: int,
+                       health_index: int | None = None) -> None:
+        """A dead replica was repaired: re-admit its chips to the planning
+        budget and point the planner's deployment state at what the runtime
+        now runs (inverse of ``observe_failures``).
+
+        ``live_replicas``: the full live ``ReplicaConfig`` tuple in cluster
+        order after the repair; ``health_index``: the repaired replica's
+        position within it — a neutral health entry (1.0) is inserted there
+        so the EWMA stays aligned and the rebuilt replica starts with a
+        clean record rather than inheriting its dying throughput.
+        """
+        self.cluster = ClusterSpec(int(surviving_chips), self.cluster.hw)
+        if not live_replicas:
+            return
+        self.current = Deployment(tuple(live_replicas))
+        self.placed = place_deployment(self.current, self.cluster)
+        if self.health is not None and health_index is not None:
+            if len(self.health) == len(live_replicas) - 1:
+                self.health = np.insert(self.health, health_index, 1.0)
+            elif len(self.health) != len(live_replicas):
+                self.health = None    # stale shape: restart the EWMA
 
     def on_switch_rollback(self, live_replicas: tuple) -> None:
         """A transactional switch failed and the runtime restored the old

@@ -22,11 +22,17 @@ class WorkloadType:
     Attributes:
       in_len / out_len: centroid sequence lengths (tokens).
       rate: arrival rate for the current time span (requests / span).
+      cached_frac: observed fraction of this type's prompt tokens served
+        from the prefix cache (0 = every prompt prefills from token 0).
+        Fed back from the runtime (``Orchestrator.observe_prefix_hits``);
+        the cost model discounts per-type prefill compute by it, so
+        shared-prefix-heavy types steer toward warm pools.
     """
 
     in_len: int
     out_len: int
     rate: float = 0.0
+    cached_frac: float = 0.0
 
     @property
     def total_len(self) -> int:
@@ -34,6 +40,10 @@ class WorkloadType:
 
     def with_rate(self, rate: float) -> "WorkloadType":
         return dataclasses.replace(self, rate=rate)
+
+    def with_cached_frac(self, cached_frac: float) -> "WorkloadType":
+        return dataclasses.replace(
+            self, cached_frac=min(max(float(cached_frac), 0.0), 1.0))
 
 
 @dataclasses.dataclass(frozen=True)

@@ -191,6 +191,12 @@ class SpanReport:
     retries: int = 0                 # transient-failure retries (all replicas)
     recovery: MigrationReport = dataclasses.field(
         default_factory=MigrationReport)   # how dead replicas' requests moved
+    # prefix-cache accounting (None / zeros when the cache is disabled)
+    prefix_hit_rate: np.ndarray | None = None  # per-type token-weighted [J]
+    prefix_hits: int = 0             # admissions that reused >= 1 page
+    prefix_misses: int = 0           # admissions with no cached prefix
+    prefix_evicted_bytes: int = 0    # device -> host tier, this span
+    prefix_restored_bytes: int = 0   # host tier -> device, this span
 
 
 @dataclasses.dataclass
@@ -216,6 +222,7 @@ class ClusterRuntime:
                  dtype=jnp.float32, seed: int = 0,
                  prefill_chunk_tokens: int | None = None,
                  decode_horizon: int = 1,
+                 prefix_cache: bool = False,
                  shard: bool = False, devices=None,
                  faults: FaultPlan | None = None, max_retries: int = 3):
         """Args:
@@ -233,6 +240,13 @@ class ClusterRuntime:
             (None = one-shot prefill; see ``ServingEngine``).
           decode_horizon: max fused decode steps per replica dispatch
             (1 = per-step decode; see ``ServingEngine``).
+          prefix_cache: enable content-addressed prefix reuse + the host
+            KV tier (``serving.prefixcache``).  With the default shared
+            ``BlockPool`` every replica shares ONE index — a prefix
+            prefilled anywhere warms the whole cluster and survives
+            replica death; sharded runtimes get one cache per replica
+            pool.  Per-type hit rates flow back through ``finish_span``
+            into ``Orchestrator.observe_prefix_hits``.
           shard: execute each replica's (tp, pp) for real — the device set
             (``devices``, default ``jax.devices()``) is carved into one
             contiguous sub-mesh per replica (``launch.mesh
@@ -264,6 +278,7 @@ class ClusterRuntime:
         self.drain_steps = drain_steps
         self.prefill_chunk_tokens = prefill_chunk_tokens
         self.decode_horizon = decode_horizon
+        self.prefix_cache = prefix_cache
         self.decode_mode = decode_mode
         self.attn_impl, _ = resolve_attn_impl(attn_impl)
         self.dtype = dtype
@@ -293,6 +308,10 @@ class ClusterRuntime:
         self._tick = 0
         self._span_completed = 0
         self._span_type_counts = np.zeros(1)
+        # per-type prefix-cache accounting (token-weighted hit rates)
+        self._span_hit_tokens = np.zeros(1)
+        self._span_ctx_tokens = np.zeros(1)
+        self._prefix_mark = (0, 0, 0, 0)      # hits/misses/evicted/restored
         self.switch_reports: list[SwitchReport] = []
         # prefill-forward tokens of replicas already torn down; together
         # with the live engines' counters this is `total_prefill_tokens`
@@ -308,7 +327,10 @@ class ClusterRuntime:
         self.max_retries = max_retries
         self.request_log: dict[int, _RequestLog] = {}
         self.dead_replicas: list[int] = []    # cluster-lifetime death list
+        self.repaired_replicas: list[int] = []  # lifetime repair/rejoin list
         self.lost_chips = 0                   # chips on dead replicas
+        # device slices of dead sharded replicas, kept for repair_replica
+        self._dead_devices: dict[int, tuple] = {}
         self._span_dead: list[int] = []
         self._span_retries = 0
         self._span_recovery = MigrationReport()
@@ -337,7 +359,8 @@ class ClusterRuntime:
             greedy=True, seed=self.seed, decode_mode=self.decode_mode,
             attn_impl=self.attn_impl, max_blocks_per_seq=max_bps,
             prefill_chunk_tokens=self.prefill_chunk_tokens,
-            decode_horizon=self.decode_horizon)
+            decode_horizon=self.decode_horizon,
+            prefix_cache=self.prefix_cache)
         if not self.shard:
             return ServingEngine(self.cfg, self.params, pool=self.pool,
                                  kv_quota=quota, **common)
@@ -436,6 +459,8 @@ class ClusterRuntime:
         self.n_types = len(plan.fractions[0]) if plan.fractions else 1
         if len(self._span_type_counts) != self.n_types:
             self._span_type_counts = np.zeros(self.n_types)
+            self._span_hit_tokens = np.zeros(self.n_types)
+            self._span_ctx_tokens = np.zeros(self.n_types)
         old = self.replicas
         # sharded runtimes carve devices contiguously in replica order, so a
         # replica whose config is unchanged must ALSO keep its device slice
@@ -785,7 +810,33 @@ class ClusterRuntime:
                 finished.append(r)
             h.emitted_span += h.engine.tokens_out - t0
             self._sync_log(h.engine)
+        self._drain_prefix_events()
         return finished
+
+    def _drain_prefix_events(self) -> None:
+        """Fold every engine's per-admission cache events into the span's
+        per-type token accounting (dead engines included — their events may
+        predate the death)."""
+        for h in self.replicas:
+            ev = h.engine.prefix_events
+            if not ev:
+                continue
+            for rid, cached, ctx in ev:
+                j = self.rid_type.get(rid, 0)
+                if j < self.n_types:
+                    self._span_hit_tokens[j] += cached
+                    self._span_ctx_tokens[j] += ctx
+            h.engine.prefix_events = []
+
+    def _caches(self) -> list:
+        """Distinct ``PrefixCache`` objects behind the live engines (one for
+        a shared pool, one per replica when sharded)."""
+        seen: dict[int, object] = {}
+        for h in self.replicas:
+            pc = h.engine.prefix_cache
+            if pc is not None:
+                seen[id(pc)] = pc
+        return list(seen.values())
 
     @property
     def pending(self) -> int:
@@ -876,12 +927,59 @@ class ClusterRuntime:
         eng.prefill_tokens = 0
         eng.pause_admission()
         if self.shard:
-            gone = set(self._replica_devices.pop(h.index, ()))
+            slice_ = self._replica_devices.pop(h.index, ())
+            gone = set(slice_)
             if gone:
+                # keep the slice around: repair_replica re-admits it (the
+                # chaos model fails replicas, not the silicon under them)
+                self._dead_devices[h.index] = tuple(slice_)
                 self.devices = [d for d in self.devices if d not in gone]
         rep = self._recover(snaps)
         self._span_recovery.merge(rep)
         return rep
+
+    def repair_replica(self, k: int) -> None:
+        """Rebuild dead replica ``k`` under its existing config and re-admit
+        its chips to the planning budget (ops/rejoin entry point; the
+        inverse of ``_fail``).
+
+        The repaired engine starts empty — its old requests were already
+        recovered onto survivors at death — but with the shared-pool prefix
+        cache it starts *warm*: the index outlived the engine.  When an
+        orchestrator is attached, ``observe_rejoin`` restores the chips to
+        its ``ClusterSpec`` and inserts a neutral health entry, so the next
+        ``plan_span`` re-solves over the recovered capacity.
+        """
+        h = self.replicas[k]
+        if not h.dead:
+            return
+        devices = None
+        if self.shard:
+            devices = self._dead_devices.pop(k, None)
+            if devices is None:
+                raise ValueError(
+                    f"replica {k}: no stashed device slice to rejoin "
+                    f"(its devices were never recorded at failure)")
+            self.devices.extend(devices)
+            self._replica_devices[k] = tuple(devices)
+        h.engine = self._build_engine(h.rc, devices)
+        self._wire_faults(h)
+        h.dead = False
+        h.failures = 0
+        h.backoff_until = 0
+        h.slot_ticks = h.emitted_span = h.completed_span = 0
+        h.shed_mark = 0
+        self.lost_chips -= h.rc.chips
+        self.repaired_replicas.append(k)
+        # a same-span death that was repaired before finish_span must not
+        # still shrink the planning budget
+        if k in self._span_dead:
+            self._span_dead.remove(k)
+        if self.orch is not None:
+            live = tuple(hh.rc for hh in self.replicas if not hh.dead)
+            idx = sum(1 for hh in self.replicas[:k] if not hh.dead)
+            self.orch.observe_rejoin(live, self.surviving_chips,
+                                     health_index=idx)
 
     def _recover(self, snaps: list[InflightSnapshot]) -> MigrationReport:
         """Restore a dead replica's requests on survivors, cheapest path
@@ -967,15 +1065,38 @@ class ClusterRuntime:
             achieved.append(base)
         span_shed = self.total_shed - self._span_shed_mark
         self._span_shed_mark = self.total_shed
+        # prefix-cache span accounting: token-weighted per-type hit rate
+        # (NaN = type saw no admissions, the orchestrator keeps its EWMA)
+        # plus span deltas of the monotonic byte/hit counters
+        self._drain_prefix_events()
+        caches = self._caches()
+        hit_rate = None
+        d_hits = d_miss = d_evict = d_restore = 0
+        if caches:
+            with np.errstate(invalid="ignore"):
+                hit_rate = self._span_hit_tokens / self._span_ctx_tokens
+            totals = (sum(c.hits for c in caches),
+                      sum(c.misses for c in caches),
+                      sum(c.evicted_bytes for c in caches),
+                      sum(c.restored_bytes for c in caches))
+            d_hits, d_miss, d_evict, d_restore = (
+                t - m for t, m in zip(totals, self._prefix_mark))
+            self._prefix_mark = totals
         report = SpanReport(achieved, [h.emitted_span for h in self.replicas],
                             self._span_completed,
                             self._span_type_counts.copy(), shed=span_shed,
                             dead_replicas=list(self._span_dead),
                             retries=self._span_retries,
-                            recovery=self._span_recovery)
+                            recovery=self._span_recovery,
+                            prefix_hit_rate=hit_rate,
+                            prefix_hits=d_hits, prefix_misses=d_miss,
+                            prefix_evicted_bytes=d_evict,
+                            prefix_restored_bytes=d_restore)
         if self.orch is not None:
             self.orch.observe_health(achieved)
             self.orch.observe_rates(self._span_type_counts)
+            if hit_rate is not None:
+                self.orch.observe_prefix_hits(hit_rate)
             if self._span_dead:
                 self.orch.observe_failures(self._span_dead,
                                            self.surviving_chips)
@@ -992,6 +1113,8 @@ class ClusterRuntime:
             h.shed_mark = len(h.engine.shed_rids)
         self._span_completed = 0
         self._span_type_counts = np.zeros(self.n_types)
+        self._span_hit_tokens = np.zeros(self.n_types)
+        self._span_ctx_tokens = np.zeros(self.n_types)
         self._span_dead = []
         self._span_retries = 0
         self._span_recovery = MigrationReport()

@@ -104,6 +104,7 @@ from repro.models.sampling import sample
 from repro.pshard import sharding_rules
 from repro.serving.kvcache import (BlockPool, PagedKVCache, copy_blocks,
                                    relayout_blocks, reshard_blocks)
+from repro.serving.prefixcache import PrefixCache
 
 
 def resolve_attn_impl(attn_impl: str) -> tuple[str, bool]:
@@ -173,6 +174,7 @@ class InflightSnapshot:
     # live KV state (page-handoff exports only)
     blocks: list | None = None       # physical page ids, sequence order
     seq_len: int = 0                 # tokens resident in those pages
+    n_shared: int = 0                # leading prefix-cache pages (refcounted)
     pool: "BlockPool | None" = None  # the pool the pages live in
     ssm: jax.Array | None = None     # [L, ...] this sequence's SSM state row
     conv: jax.Array | None = None
@@ -213,6 +215,7 @@ class ServingEngine:
                  max_blocks_per_seq: int | None = None,
                  prefill_chunk_tokens: int | None = None,
                  decode_horizon: int = 1,
+                 prefix_cache: bool = False,
                  mesh=None, shard_plan=None):
         """``mesh`` + ``shard_plan`` turn on real intra-replica model
         parallelism: params are placed with ``param_pspecs`` shardings, the
@@ -319,6 +322,16 @@ class ServingEngine:
         if prefill_chunk_tokens is not None and cfg.has_ssm:
             prefill_chunk_tokens = None
         self.prefill_chunk_tokens = prefill_chunk_tokens
+        # content-addressed prefix reuse: resuming prefill mid-prompt rides
+        # the chunked-prefill forward, which SSM archs don't have, and pages
+        # carry no SSM state — so the cache is attention-only
+        self.prefix_cache = None
+        if prefix_cache and cfg.has_attn and not cfg.has_ssm:
+            self.prefix_cache = (self.cache.pool.prefix_cache
+                                 or PrefixCache(self.cache.pool))
+        # (rid, cached_tokens, ctx_tokens) per admission — the cluster
+        # drains these into per-workload-type hit rates for the planner
+        self.prefix_events: list[tuple[int, int, int]] = []
 
         self._prefill = jax.jit(
             lambda p, toks: prefill(p, cfg, tokens=toks))
@@ -505,10 +518,12 @@ class ServingEngine:
                        if self.cache.ssm is not None else None)
             conv_row = (self.cache.conv[:, slot]
                         if self.cache.conv is not None else None)
+            n_shared = self.cache.seq_shared.get(slot, 0)
             blocks, seq_len = self.cache.disown_slot(slot)
             snaps.append(InflightSnapshot(
                 r.rid, r.prompt, list(r.generated), r.max_new_tokens,
-                blocks=blocks, seq_len=seq_len, pool=self.cache.pool,
+                blocks=blocks, seq_len=seq_len, n_shared=n_shared,
+                pool=self.cache.pool,
                 ssm=ssm_row, conv=conv_row, deadline=r.deadline,
                 tpot=r.tpot_budget))
         for r in self.waiting:
@@ -552,12 +567,14 @@ class ServingEngine:
             same_pool = s.pool is self.cache.pool
             if same_pool:
                 if (s.pool.block_size != self.cache.block_size
-                        or not self.cache.can_adopt(len(s.blocks), total)):
+                        or not self.cache.can_adopt(len(s.blocks), total,
+                                                    n_shared=s.n_shared)):
                     rejected.append(s)
                     continue
                 slot = free[0]
                 self.cache.adopt_slot(slot, s.blocks, s.seq_len,
-                                      total_tokens=total)
+                                      total_tokens=total,
+                                      n_shared=s.n_shared)
             else:
                 if not self.cache.can_admit(s.seq_len, total_tokens=total):
                     rejected.append(s)
@@ -639,14 +656,24 @@ class ServingEngine:
 
     def load_stats(self) -> dict:
         """Occupancy snapshot for routers / the cluster health loop."""
+        pc = self.prefix_cache
         return {
             "waiting": len(self.waiting),
             "active": len(self.active),
             "max_seqs": self.max_seqs,
             "free_blocks": self.cache.n_free_blocks,
+            # hit-rate-adjusted capacity: cold cached pages are evictable on
+            # demand, so they count as free for admission planning
+            "free_blocks_effective": (self.cache.n_free_blocks
+                                      + (pc.cold_blocks() if pc else 0)),
             "tokens_out": self.tokens_out,
             "steps": self.steps,
             "prefill_tokens": self.prefill_tokens,
+            "prefix_hits": pc.hits if pc else 0,
+            "prefix_misses": pc.misses if pc else 0,
+            "prefix_hit_tokens": pc.hit_tokens if pc else 0,
+            "prefix_evicted_bytes": pc.evicted_bytes if pc else 0,
+            "prefix_restored_bytes": pc.restored_bytes if pc else 0,
             "shed": len(self.shed_rids),
             "decode_syncs": self.decode_syncs,
             "load": (len(self.waiting) + len(self.active)) / self.max_seqs,
@@ -694,14 +721,46 @@ class ServingEngine:
             # reserve the sequence's lifetime footprint (prompt + remaining
             # decode growth) so later extends can't exhaust the shared pool
             total = ctx + (req.max_new_tokens - len(req.generated)) - 1
-            if not self.cache.can_admit(ctx, total_tokens=total):
+            cached, shared, cow = 0, (), None
+            if self.prefix_cache is not None and req.prefill_pos == 0:
+                # attach (which restores host-tier pages) must precede the
+                # capacity check: a failed restore shrinks the match.  The
+                # cap at ctx - 1 keeps at least one token in the prefill
+                # forward so its logits produce the first generated token.
+                m = self.prefix_cache.match(req.prefill_tokens, ctx - 1)
+                cached, shared, cow = self.prefix_cache.attach(m)
+            if not self.cache.can_admit(ctx, total_tokens=total,
+                                        shared_blocks=shared):
                 break
             self.waiting.pop(0)
             req.slot = free.pop(0)
-            self.cache.admit(req.slot, ctx, total_tokens=total)
+            self.cache.admit(req.slot, ctx, total_tokens=total,
+                             shared_blocks=shared, cow_src=cow)
+            if cached:
+                req.prefill_pos = cached   # prefill starts past the prefix
+            if self.prefix_cache is not None:
+                self.prefix_events.append((req.rid, cached, ctx))
             self.active[req.slot] = req
             admitted.append(req)
         return admitted
+
+    def _publish(self, slot: int, r: EngineRequest) -> None:
+        """Hand this sequence's full resident pages to the prefix index so
+        later prompts with the same leading tokens attach them by refcount.
+        Called whenever the context is fully paged (prefill complete) and
+        again at retirement/shedding — by then decode has extended the
+        stream, so multi-turn follow-ups hit the generated pages too."""
+        if self.prefix_cache is None:
+            return
+        blocks = self.cache.seq_blocks.get(slot)
+        if not blocks:
+            return
+        resident = int(self.cache.seq_lens[slot])
+        stream = np.asarray(r.prompt, np.int32)
+        if r.generated:
+            stream = np.concatenate(
+                [stream, np.asarray(r.generated, np.int32)])
+        self.prefix_cache.publish(stream[:resident], blocks)
 
     def _run_prefill(self, reqs: list[EngineRequest]) -> None:
         # bucket by prompt length: same-length batches need no padding, so
@@ -729,6 +788,42 @@ class ServingEngine:
                 r.prefill_pos = pl
                 r.generated.append(int(first[i]))
                 self.tokens_out += 1
+                self._publish(r.slot, r)
+
+    def _resume_prefill(self, reqs: list[EngineRequest]) -> None:
+        """One-shot prefill of the *uncached suffix* only.
+
+        Prefix-cache admissions land with ``prefill_pos`` at the first
+        uncached token; the suffix runs through the chunked-prefill forward
+        (which attends to the cached pages via the block table) in a single
+        call, so only ``len(prompt) - prefill_pos`` tokens hit
+        ``prefill_tokens``.  Writes start at ``prefill_pos``, whose page is
+        always private (fresh or COW), so shared pages stay immutable.
+        """
+        for r in reqs:
+            toks = r.prefill_tokens
+            start = r.prefill_pos
+            n_valid = len(toks) - start
+            cb = 1 << max(0, n_valid - 1).bit_length()
+            buf = np.zeros((1, cb), np.int32)
+            buf[0, :n_valid] = toks[start:]
+            bs = self.cache.block_size
+            need = (len(toks) + bs - 1) // bs
+            n_pages = _pow2_bucket(need, self.cache.max_blocks_per_seq)
+            table = self.cache.block_table_dev[r.slot:r.slot + 1, :n_pages]
+            with self._rules_ctx():
+                logits, k, v = self._chunk(self.params, jnp.asarray(buf),
+                                           self.cache.k, self.cache.v, table,
+                                           jnp.int32(start),
+                                           jnp.int32(n_valid))
+            self.cache.k, self.cache.v = k, v
+            self.prefill_tokens += n_valid      # cached tokens cost zero
+            r.prefill_pos = len(toks)
+            first = self._pick(logits)
+            r.t_first = self.clock()
+            r.generated.append(int(first[0]))
+            self.tokens_out += 1
+            self._publish(r.slot, r)
 
     def _advance_chunked(self) -> None:
         """Spread this step's chunk-token budget over ALL mid-prefill
@@ -787,6 +882,7 @@ class ServingEngine:
                 r.t_first = self.clock()
                 r.generated.append(int(first[0]))
                 self.tokens_out += 1
+                self._publish(slot, r)
 
     def _pick(self, logits: jax.Array) -> np.ndarray:
         if self.greedy:
@@ -915,6 +1011,7 @@ class ServingEngine:
             r = self.active[s]
             if len(r.generated) >= r.max_new_tokens:
                 r.done = True
+                self._publish(s, r)   # decode pages join the prefix index
                 self.cache.release_slot(s)
                 del self.active[s]
                 done.append(r)
@@ -945,10 +1042,20 @@ class ServingEngine:
         decode_slots = [s for s, r in self.active.items() if not r.prefilling]
         admitted = self._admit()
         chunk = self.prefill_chunk_tokens
+        # prefix-cache hits (prefill_pos > 0) must not re-run the full
+        # prompt: they resume mid-prompt via the chunk forward instead
         oneshot = [r for r in admitted
-                   if chunk is None or len(r.prefill_tokens) <= chunk]
+                   if (chunk is None or len(r.prefill_tokens) <= chunk)
+                   and r.prefill_pos == 0]
         if oneshot:
             self._run_prefill(oneshot)
+        if chunk is None:
+            resumed = [r for r in admitted
+                       if 0 < r.prefill_pos < len(r.prefill_tokens)]
+            if resumed:
+                self._resume_prefill(resumed)
+        # chunked engines resume cached admissions in _advance_chunked,
+        # which already starts each chunk at prefill_pos
         # capture the chunk event BEFORE advancing: a prefill that completes
         # this very step is still a per-step event (its sequence must join
         # the decode batch next step, not a horizon later)
@@ -980,6 +1087,7 @@ class ServingEngine:
             pace = (now - r.t_first) / (len(r.generated) - 1)
             if pace > r.tpot_budget:
                 self.shed_rids.append(r.rid)
+                self._publish(s, r)   # evicted work still warms the cache
                 self.cache.release_slot(s)
                 del self.active[s]
 

@@ -40,6 +40,18 @@ layout a sequence between pools whose page geometry differs.
 
 ``gather_dense`` survives only for the legacy dense-gather decode path and
 parity tests; the serving decode path consumes pages directly.
+
+Prefix sharing (``repro.serving.prefixcache`` builds on these): ``admit``
+can attach already-resident pages by refcount (``shared_blocks``) and
+copy-on-write a partially-matched page (``cow_src``); such pages are
+*counted once* — they never enter a view's reservation or ``used_blocks``,
+and every teardown path (``release_slot``/``disown_slot``/migration)
+decrefs through ``BlockAllocator.release`` instead of freeing, so a page
+survives as long as any sequence or the cache index references it.  A
+``PrefixCache`` attached to ``BlockPool.prefix_cache`` is consulted under
+allocation pressure (``BlockPool.reclaim``) to evict cold cached pages to
+host memory — see the prefixcache module docstring for hashing granularity,
+the refcount lifecycle, and the eviction policy.
 """
 from __future__ import annotations
 
@@ -59,6 +71,10 @@ class BlockAllocator:
     def __init__(self, num_blocks: int):
         self.free = list(range(num_blocks - 1, -1, -1))
         self.refs = np.zeros(num_blocks, np.int32)
+        # blocks held by more than one owner (prefix sharing): they occupy
+        # physical capacity outside any single sequence's reservation, so
+        # reservation headroom must subtract them — see n_free_blocks
+        self.pinned = 0
 
     def alloc(self, n: int) -> list[int]:
         if len(self.free) < n:
@@ -72,6 +88,8 @@ class BlockAllocator:
     def release(self, blocks: list[int]) -> None:
         for b in blocks:
             self.refs[b] -= 1
+            if self.refs[b] == 1:
+                self.pinned -= 1
             if self.refs[b] <= 0:
                 self.refs[b] = 0
                 self.free.append(b)
@@ -80,6 +98,8 @@ class BlockAllocator:
         """Prefix sharing: bump refcounts (copy-on-write on append)."""
         for b in blocks:
             self.refs[b] += 1
+            if self.refs[b] == 2:
+                self.pinned += 1
 
     @property
     def n_free(self) -> int:
@@ -128,6 +148,14 @@ class BlockPool:
                 self.v = jax.device_put(self.v, sh)
         self.allocator = BlockAllocator(num_blocks)
         self.reserved = 0           # blocks promised to admitted sequences
+        self.prefix_cache = None    # set by PrefixCache.__init__ when enabled
+
+    def reclaim(self, n: int) -> None:
+        """Make room for an ``n``-block allocation by evicting cold cached
+        pages to the host tier (no-op without a prefix cache, or when the
+        free list already covers the request)."""
+        if self.prefix_cache is not None and self.allocator.n_free < n:
+            self.prefix_cache.reclaim(n)
 
     @property
     def trash_page(self) -> int:
@@ -162,6 +190,9 @@ class PagedKVCache:
     used_blocks: int = 0
     reserved_blocks: int = 0    # admitted sequences' lifetime reservations
     seq_reserved: dict = dataclasses.field(default_factory=dict)
+    seq_shared: dict = dataclasses.field(default_factory=dict)
+    # slot -> leading prefix-cache pages attached by refcount (counted once
+    # pool-wide: excluded from this view's used/reserved accounting)
 
     @classmethod
     def create(cls, cfg: ModelConfig, num_blocks: int = 256,
@@ -240,8 +271,16 @@ class PagedKVCache:
 
     @property
     def n_free_blocks(self) -> int:
-        """Blocks this view may still *reserve* (quota- and pool-limited)."""
-        n = self.pool.num_blocks - self.pool.reserved
+        """Blocks this view may still *reserve* (quota- and pool-limited).
+
+        ``pinned`` blocks (multi-owner shared prefix pages) sit outside
+        every sequence reservation but still occupy physical capacity, so
+        they come off the pool headroom; *cold* cached pages do not — they
+        are evicted on demand (``BlockPool.reclaim``), which is exactly how
+        the prefix cache oversubscribes HBM.
+        """
+        n = (self.pool.num_blocks - self.pool.reserved
+             - self.pool.allocator.pinned)
         if self.quota is not None:
             n = min(n, self.quota - self.reserved_blocks)
         return n
@@ -257,17 +296,37 @@ class PagedKVCache:
     # -- slot lifecycle -------------------------------------------------------
 
     def admit(self, slot: int, prompt_len: int,
-              total_tokens: int | None = None) -> None:
+              total_tokens: int | None = None,
+              shared_blocks: tuple | list = (),
+              cow_src: int | None = None) -> None:
         """Admit one sequence: allocate its prompt blocks now and *reserve*
         its full lifetime block count (``total_tokens``, defaulting to just
-        the prompt) so quota-respecting decode growth can never fail."""
+        the prompt) so quota-respecting decode growth can never fail.
+
+        ``shared_blocks`` are prefix-cache pages covering the sequence's
+        leading full pages: attached by refcount (``allocator.share``), not
+        allocated, and excluded from this view's reservation — a shared page
+        costs the pool once no matter how many sequences read it.
+        ``cow_src`` names a cached page the sequence diverges *inside*; its
+        contents are copied into the first freshly-allocated (private) page
+        so writes never touch the shared original.
+        """
         n = self._blocks(prompt_len)
-        reserve = max(n, self._blocks(total_tokens or prompt_len))
-        blocks = self.allocator.alloc(n)
-        self.used_blocks += n
+        s = len(shared_blocks)
+        fresh = n - s
+        reserve = max(n, self._blocks(total_tokens or prompt_len)) - s
+        self.pool.reclaim(fresh)
+        new_blocks = self.allocator.alloc(fresh)
+        self.allocator.share(list(shared_blocks))
+        if cow_src is not None:
+            copy_blocks(self.pool, self.pool, [cow_src], [new_blocks[0]])
+        blocks = list(shared_blocks) + new_blocks
+        self.used_blocks += fresh
         self.reserved_blocks += reserve
         self.pool.reserved += reserve
         self.seq_reserved[slot] = reserve
+        if s:
+            self.seq_shared[slot] = s
         self.seq_blocks[slot] = blocks
         self.block_table[slot, :] = 0
         self.block_table[slot, :n] = blocks
@@ -280,13 +339,26 @@ class PagedKVCache:
         self.seq_lens_dev = self.seq_lens_dev.at[slot].set(prompt_len)
 
     def can_admit(self, prompt_len: int, total_tokens: int | None = None,
-                  headroom_blocks: int = 2) -> bool:
+                  headroom_blocks: int = 2,
+                  shared_blocks: tuple | list = ()) -> bool:
         """With ``total_tokens`` (prompt + expected decode growth) the check
-        is a firm reservation; without it, legacy prompt + headroom."""
+        is a firm reservation; without it, legacy prompt + headroom.
+
+        ``shared_blocks`` (prefix-cache pages the admission would attach)
+        are already resident, so they shrink the need — but any of them
+        still *cold* (single-ref) leaves the evictable set on attach and
+        must be paid for out of headroom once, by its first sharer; without
+        that term a pool full of hot shared pages could approve more
+        reservations than physical blocks can realize."""
+        s = len(shared_blocks)
+        refs = self.allocator.refs
+        pin = sum(1 for b in shared_blocks if refs[b] == 1)
         if total_tokens is not None:
-            return self.n_free_blocks >= max(self._blocks(prompt_len),
-                                             self._blocks(total_tokens))
-        return self.n_free_blocks >= self._blocks(prompt_len) + headroom_blocks
+            need = max(self._blocks(prompt_len),
+                       self._blocks(total_tokens)) - s + pin
+            return self.n_free_blocks >= need
+        return (self.n_free_blocks
+                >= self._blocks(prompt_len) - s + pin + headroom_blocks)
 
     def extend(self, slot: int) -> None:
         """Ensure capacity for one more token (``extend_for(slot, 1)``)."""
@@ -318,7 +390,11 @@ class PagedKVCache:
         if need > n_have:
             if need > self.max_blocks_per_seq:
                 raise MemoryError("sequence exceeds max_blocks_per_seq")
-            short = need - max(self.seq_reserved.get(slot, 0), n_have)
+            # reservations cover only this sequence's *private* pages —
+            # shared prefix pages are counted once pool-wide
+            s = self.seq_shared.get(slot, 0)
+            short = (need - s) - max(self.seq_reserved.get(slot, 0),
+                                     n_have - s)
             if short > 0:
                 # growth beyond the admission reservation (legacy
                 # prompt-only admits): extend the reservation, but never
@@ -326,12 +402,14 @@ class PagedKVCache:
                 if (self.quota is not None
                         and self.reserved_blocks + short > self.quota):
                     raise MemoryError("replica KV quota exceeded")
-                if self.pool.reserved + short > self.pool.num_blocks:
+                if (self.pool.reserved + self.pool.allocator.pinned + short
+                        > self.pool.num_blocks):
                     raise MemoryError("KV pool fully reserved")
                 self.reserved_blocks += short
                 self.pool.reserved += short
-                self.seq_reserved[slot] = need
+                self.seq_reserved[slot] = need - s
             grow = need - n_have
+            self.pool.reclaim(grow)
             new_blocks = self.allocator.alloc(grow)
             self.used_blocks += grow
             self.seq_blocks[slot].extend(new_blocks)
@@ -361,9 +439,12 @@ class PagedKVCache:
 
     def release_slot(self, slot: int) -> None:
         blocks = self.seq_blocks.pop(slot, [])
+        # decref, not free: shared prefix pages (and any page the cache
+        # index holds) survive until their last reference drops
         self.allocator.release(blocks)
-        self.used_blocks -= len(blocks)
-        reserve = self.seq_reserved.pop(slot, len(blocks))
+        s = self.seq_shared.pop(slot, 0)
+        self.used_blocks -= len(blocks) - s
+        reserve = self.seq_reserved.pop(slot, len(blocks) - s)
         self.reserved_blocks -= reserve
         self.pool.reserved -= reserve
         self.seq_lens[slot] = 0
@@ -390,8 +471,9 @@ class PagedKVCache:
         """
         blocks = self.seq_blocks.pop(slot)
         seq_len = int(self.seq_lens[slot])
-        self.used_blocks -= len(blocks)
-        reserve = self.seq_reserved.pop(slot, len(blocks))
+        s = self.seq_shared.pop(slot, 0)
+        self.used_blocks -= len(blocks) - s
+        reserve = self.seq_reserved.pop(slot, len(blocks) - s)
         self.reserved_blocks -= reserve
         self.pool.reserved -= reserve
         self.seq_lens[slot] = 0
@@ -401,29 +483,36 @@ class PagedKVCache:
         self.seq_lens_dev = self.seq_lens_dev.at[slot].set(0)
         return blocks, seq_len
 
-    def can_adopt(self, n_blocks: int, total_tokens: int) -> bool:
-        return self.n_free_blocks >= max(n_blocks, self._blocks(total_tokens))
+    def can_adopt(self, n_blocks: int, total_tokens: int,
+                  n_shared: int = 0) -> bool:
+        return (self.n_free_blocks
+                >= max(n_blocks, self._blocks(total_tokens)) - n_shared)
 
     def adopt_slot(self, slot: int, blocks: list[int], seq_len: int,
-                   total_tokens: int | None = None) -> None:
+                   total_tokens: int | None = None,
+                   n_shared: int = 0) -> None:
         """Adopt already-allocated pool blocks into a slot of this view.
 
         The inverse of ``disown_slot``: block data stays where it is; only
         ownership accounting and the (host + device) block table move.  The
-        blocks must belong to this view's pool.
+        blocks must belong to this view's pool.  ``n_shared`` leading blocks
+        are prefix-cache pages the sequence holds by refcount — counted once
+        pool-wide, so they stay out of this view's used/reserved totals.
         """
         n = len(blocks)
         if n > self.max_blocks_per_seq:
             raise MemoryError("adopted sequence exceeds max_blocks_per_seq")
-        reserve = max(n, self._blocks(total_tokens or seq_len))
-        if not self.can_adopt(n, total_tokens or seq_len):
+        reserve = max(n, self._blocks(total_tokens or seq_len)) - n_shared
+        if not self.can_adopt(n, total_tokens or seq_len, n_shared=n_shared):
             raise MemoryError(
                 f"cannot adopt {n} blocks (reserve {reserve}): view has "
                 f"{self.n_free_blocks} free")
-        self.used_blocks += n
+        self.used_blocks += n - n_shared
         self.reserved_blocks += reserve
         self.pool.reserved += reserve
         self.seq_reserved[slot] = reserve
+        if n_shared:
+            self.seq_shared[slot] = n_shared
         self.seq_blocks[slot] = list(blocks)
         self.block_table[slot, :] = 0
         self.block_table[slot, :n] = blocks

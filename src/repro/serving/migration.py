@@ -70,6 +70,13 @@ def release_snapshot_pages(snap: InflightSnapshot) -> None:
 
     Disowned pages belong to nobody's cache view, so this is pure allocator
     bookkeeping.  Idempotent: the page fields are cleared.
+
+    This is a *decref*, not a free: pages the sequence attached from the
+    prefix cache (``serving.prefixcache``) are also referenced by the
+    cache's index (and possibly by other live sequences), so releasing a
+    dead replica's snapshot must never recycle a shared page out from
+    under a survivor — ``BlockAllocator.release`` only returns a block to
+    the free list when its refcount reaches zero.
     """
     if snap.blocks is not None and snap.pool is not None:
         snap.pool.allocator.release(snap.blocks)

@@ -1,0 +1,305 @@
+"""Content-addressed prefix cache + host-tiered KV store over a BlockPool.
+
+Serving traffic at scale is dominated by shared prefixes — system prompts,
+few-shot templates, multi-turn chat — yet a plain paged engine prefills
+every prompt from token 0 and keeps every page in device HBM.  This module
+removes both costs:
+
+**Prefix reuse.**  ``PrefixCache`` indexes *full, page-aligned* chunks of
+token streams by a chained content hash: page ``i``'s key is
+``H(key[i-1] || tokens[i*bs:(i+1)*bs])``, so a key identifies the page's
+content *and* its entire prefix — two prompts share a cached page iff they
+are token-identical up to and including it.  On admission, the engine walks
+the new prompt's chain through the index (``match``/``attach``) and attaches
+every matched page to the sequence via the allocator's refcount path
+(``BlockAllocator.share``): zero bytes move, zero tokens are recomputed, and
+prefill starts at the first uncached token.  When the match covers the whole
+prompt the last matched page is returned as a **copy-on-write source**
+instead of a shared page — the sequence diverges *inside* it (its final
+prompt token, and decode after it, must be written mid-page), so the page is
+copied into a private block at admission and the shared original stays
+immutable.  Fully-shared pages are never written: prefill resumes past them
+and decode writes only positions ``>= prompt_len``, which land in the COW
+page or later private pages.
+
+**Refcount lifecycle.**  Every *device-resident* index entry holds exactly
+one allocator reference on its page (taken by ``publish``/restore); each
+sequence that attaches the page holds one more (``share`` at admission,
+released by the normal ``release_slot`` decref).  A page is therefore
+*cold* when its allocator refcount is exactly 1 — the index's own — i.e.
+zero sequences reference it.  Finished/evicted sequences ``publish`` their
+prompt (and generated-context) pages back to the index before their refs
+drop, so the pages outlive the sequence at refcount 1 instead of returning
+to the free list.
+
+**Host tier / eviction policy.**  Cold pages oversubscribe HBM: when the
+allocator cannot satisfy an allocation (``BlockPool.reclaim``), the cache
+evicts cold pages — LRU over device-resident entries with zero sequence
+refs — to a host-memory store (dense ``[L, bs, Hkv, D]`` numpy, the pinned
+staging layout ``gather_tokens``/``scatter_tokens`` already speak) and
+releases their device blocks.  A later ``attach`` hit on a host-tier entry
+restores it into a fresh pool block via the same jitted scatter, paying one
+host→device copy instead of a prefill forward.  ``evicted_bytes`` /
+``restored_bytes`` feed ``load_stats``/``SpanReport`` so the orchestrator
+sees tier pressure, and per-type hit rates discount prefill cost in
+``core.costmodel`` (``WorkloadType.cached_frac``).
+
+The cache is pool-scoped: replicas sharing one ``BlockPool`` (the default
+``ClusterRuntime``) share one index, so a prefix prefilled by any replica
+warms every sibling — and survives the replica's death, which is what lets
+re-prefill-from-log recovery re-hit the cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+
+import numpy as np
+
+from repro.serving.kvcache import BlockPool, gather_tokens, scatter_tokens
+
+
+def _page_key(parent: bytes, chunk: np.ndarray) -> bytes:
+    """Chained content hash of one full page of tokens."""
+    h = hashlib.blake2b(parent, digest_size=16)
+    h.update(np.ascontiguousarray(chunk, np.int32).tobytes())
+    return h.digest()
+
+
+@dataclasses.dataclass
+class _Entry:
+    """One cached page: device-resident (``block``) or host-tiered (``host``)."""
+    key: bytes
+    block: int | None                 # physical pool page; None = evicted
+    host: tuple | None = None         # (k, v) dense [L, bs, Hkv, D] numpy
+    tick: int = 0                     # LRU clock at last touch
+
+
+@dataclasses.dataclass
+class PrefixMatch:
+    """A peeked index walk over one prompt (no side effects yet)."""
+    cached_tokens: int                # tokens the cache can provide (< prompt)
+    keys: list                        # matched entry keys, page order
+    cow: bool                         # last matched page must be copied
+
+
+class PrefixCache:
+    """Content-addressed page index + host tier for one ``BlockPool``.
+
+    Attach to a pool with ``PrefixCache(pool)``; the pool's ``reclaim``
+    hook then evicts cold pages under allocation pressure.  All methods are
+    host-side bookkeeping except the evict/restore data moves, which ride
+    the existing jitted ``gather_tokens``/``scatter_tokens``.
+    """
+
+    def __init__(self, pool: BlockPool):
+        self.pool = pool
+        pool.prefix_cache = self
+        self.index: dict[bytes, _Entry] = {}
+        self._tick = 0
+        # observability (monotonic, cluster reads deltas per span)
+        self.hits = 0                 # admissions that reused >= 1 page
+        self.misses = 0               # admissions with no cached prefix
+        self.hit_tokens = 0           # prompt tokens served from the cache
+        self.published_pages = 0
+        self.evicted_bytes = 0        # device -> host tier
+        self.restored_bytes = 0       # host tier -> device
+        self.dropped_pages = 0        # cold pages freed without a host copy
+
+    # -- lookup / attach -------------------------------------------------------
+
+    def match(self, tokens: np.ndarray, limit: int) -> PrefixMatch:
+        """Walk the prompt's page chain through the index; pure peek.
+
+        ``limit`` caps the cached length (callers pass ``prompt_len - 1`` so
+        at least the final prompt token always goes through a prefill
+        forward — its logits produce the first generated token).  A cap
+        that lands mid-page marks the last matched page copy-on-write.
+        """
+        bs = self.pool.block_size
+        keys: list[bytes] = []
+        parent = b""
+        n_full = min(len(tokens), limit if limit >= 0 else 0) // bs
+        matched = 0
+        for i in range(int(np.ceil(len(tokens) / bs))):
+            if matched * bs >= limit:
+                break
+            chunk = tokens[i * bs:(i + 1) * bs]
+            if len(chunk) < bs:
+                break                 # partial tail page is never indexed
+            key = _page_key(parent, chunk)
+            if key not in self.index:
+                break
+            keys.append(key)
+            parent = key
+            matched += 1
+        del n_full
+        cached = min(matched * bs, limit)
+        cow = bool(cached % bs) and matched > 0
+        return PrefixMatch(cached if matched else 0, keys, cow)
+
+    def attach(self, m: PrefixMatch) -> tuple[int, list[int], int | None]:
+        """Realize a match: restore host-tier pages, return attachable blocks.
+
+        Returns ``(cached_tokens, shared_blocks, cow_src)``: the caller
+        (``PagedKVCache.admit``) bumps each shared block's refcount and
+        copies ``cow_src`` (a block id, or None) into a private page.  A
+        host-tier entry that cannot be restored (pool truly full even after
+        reclaim) truncates the match there — the suffix is simply
+        recomputed.  No refcounts move here, so an admission that fails
+        after ``attach`` leaves the index untouched.
+        """
+        bs = self.pool.block_size
+        blocks: list[int] = []
+        ok_tokens = 0
+        for key in m.keys:
+            e = self.index.get(key)
+            if e is None:
+                break
+            if e.block is None:
+                try:
+                    self._restore(e)
+                except MemoryError:
+                    break
+            self._tick += 1
+            e.tick = self._tick
+            blocks.append(e.block)
+            ok_tokens += bs
+        cached = min(ok_tokens, m.cached_tokens)
+        if cached <= 0:
+            self.misses += 1
+            return 0, [], None
+        cow_src = None
+        n_shared = cached // bs
+        if cached % bs:
+            # the sequence diverges inside the last matched page: attach it
+            # by copy, not by reference
+            cow_src = blocks[n_shared]
+        self.hits += 1
+        self.hit_tokens += cached
+        return cached, blocks[:n_shared], cow_src
+
+    # -- publish ---------------------------------------------------------------
+
+    def publish(self, tokens: np.ndarray, blocks: list[int]) -> int:
+        """Index every full page of ``tokens`` resident in ``blocks``.
+
+        Called when a sequence's context is fully in pages (end of prefill)
+        and again at retirement (decode pages extend the reusable prefix —
+        multi-turn traffic hits them).  New entries take one allocator ref
+        on their page so it survives the sequence's release; pages whose
+        chain key is already indexed are skipped (content dedup).  Returns
+        the number of pages newly indexed.
+        """
+        bs = self.pool.block_size
+        n_full = min(len(tokens) // bs, len(blocks))
+        parent = b""
+        added = 0
+        for i in range(n_full):
+            key = _page_key(parent, tokens[i * bs:(i + 1) * bs])
+            e = self.index.get(key)
+            if e is None:
+                self._tick += 1
+                self.index[key] = _Entry(key, blocks[i], tick=self._tick)
+                self.pool.allocator.share([blocks[i]])
+                self.published_pages += 1
+                added += 1
+            elif e.block is None:
+                # same content is back on device: re-point the entry at the
+                # live page and drop the stale host copy
+                e.block = blocks[i]
+                e.host = None
+                self.pool.allocator.share([blocks[i]])
+                self._tick += 1
+                e.tick = self._tick
+            parent = key
+        return added
+
+    # -- host tier -------------------------------------------------------------
+
+    def _page_nbytes(self) -> int:
+        k = self.pool.k
+        if k is None:
+            return 0
+        # one page in both k and v: [L, Hkv, bs, D] at pool dtype
+        return 2 * int(np.prod(k.shape[2:])) * k.shape[0] * k.dtype.itemsize
+
+    def _evict(self, e: _Entry) -> None:
+        """Move one cold page to the host store and free its device block."""
+        bs = self.pool.block_size
+        k, v = gather_tokens(self.pool, [e.block], bs)
+        e.host = (np.asarray(k), np.asarray(v))
+        self.evicted_bytes += e.host[0].nbytes + e.host[1].nbytes
+        self.pool.allocator.release([e.block])
+        e.block = None
+
+    def _restore(self, e: _Entry) -> None:
+        """Bring a host-tiered page back into a fresh device block."""
+        alloc = self.pool.allocator
+        if alloc.n_free < 1:
+            self.reclaim(1, skip=e)
+        if alloc.n_free < 1:
+            raise MemoryError("no device block free to restore cached page")
+        (b,) = alloc.alloc(1)
+        scatter_tokens(self.pool, [b], e.host[0], e.host[1])
+        self.restored_bytes += e.host[0].nbytes + e.host[1].nbytes
+        e.block = b
+        e.host = None
+
+    def cold_blocks(self) -> int:
+        """Device pages held only by the index (reclaimable on demand)."""
+        refs = self.pool.allocator.refs
+        return sum(1 for e in self.index.values()
+                   if e.block is not None and refs[e.block] == 1)
+
+    def reclaim(self, n: int, skip: _Entry | None = None) -> None:
+        """Evict cold pages (LRU first) until ``n`` blocks are free.
+
+        Only entries with zero sequence refs (allocator refcount exactly 1,
+        the index's own) are candidates; shared pages in live use are never
+        touched.  Called by ``BlockPool.reclaim`` under allocation pressure
+        — this is what lets admissions oversubscribe HBM with cold cached
+        pages instead of shedding.
+        """
+        alloc = self.pool.allocator
+        if alloc.n_free >= n:
+            return
+        cold = [e for e in self.index.values()
+                if e is not skip and e.block is not None
+                and alloc.refs[e.block] == 1]
+        cold.sort(key=lambda e: e.tick)
+        for e in cold:
+            if alloc.n_free >= n:
+                break
+            self._evict(e)
+
+    def drop_cold(self) -> int:
+        """Free every cold device page without keeping a host copy (tests /
+        teardown); returns the number of pages dropped."""
+        alloc = self.pool.allocator
+        dropped = 0
+        for key in list(self.index):
+            e = self.index[key]
+            if e.block is not None and alloc.refs[e.block] == 1:
+                alloc.release([e.block])
+                del self.index[key]
+                dropped += 1
+                self.dropped_pages += 1
+        return dropped
+
+    # -- observability ---------------------------------------------------------
+
+    def stats(self) -> dict:
+        return {
+            "entries": len(self.index),
+            "device_pages": sum(1 for e in self.index.values()
+                                if e.block is not None),
+            "host_pages": sum(1 for e in self.index.values()
+                              if e.host is not None),
+            "cold_blocks": self.cold_blocks(),
+            "hits": self.hits,
+            "misses": self.misses,
+            "hit_tokens": self.hit_tokens,
+            "evicted_bytes": self.evicted_bytes,
+            "restored_bytes": self.restored_bytes,
+        }

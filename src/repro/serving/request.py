@@ -166,3 +166,23 @@ def synthesize_trace(n_spans: int, mean_rate: float, trace_id: int = 1,
 
 def span_of(req: Request, span_seconds: float = 60.0) -> int:
     return int(req.arrival // span_seconds)
+
+
+def shared_prefix_prompts(n: int, prefix_len: int, unique_len: int,
+                          n_templates: int = 1, vocab: int = 1000,
+                          seed: int = 0) -> list[np.ndarray]:
+    """Prompt token streams with heavy shared prefixes (system prompts /
+    few-shot templates), the traffic shape the prefix cache exists for.
+
+    Each prompt is one of ``n_templates`` fixed template prefixes of
+    ``prefix_len`` tokens followed by a per-request unique suffix of
+    ``unique_len`` tokens; requests round-robin over the templates.  With a
+    warm cache only the suffix (plus the template's first pass) prefills —
+    ``benchmarks/bench_prefix.py`` measures exactly that ratio.
+    """
+    rng = np.random.RandomState(seed)
+    templates = [rng.randint(0, vocab, prefix_len).astype(np.int32)
+                 for _ in range(n_templates)]
+    return [np.concatenate([templates[i % n_templates],
+                            rng.randint(0, vocab, unique_len).astype(np.int32)])
+            for i in range(n)]

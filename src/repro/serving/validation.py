@@ -53,12 +53,20 @@ class RealSpanOutcome:
 
 def run_real_spans(model: str = "opt-30b", chips: int = 6, n_spans: int = 2,
                    requests_per_span: int = 6, seed: int = 0,
-                   shard: bool = False
+                   shard: bool = False, prefix_cache: bool = True,
+                   shared_prefix_len: int = 16
                    ) -> tuple[list[RealSpanOutcome], "object"]:
     """Drive ``n_spans`` orchestrator plans through a real ClusterRuntime.
 
     Returns the per-span outcomes and the runtime (whose ``results`` hold
     every finished request for parity / completeness checks).
+
+    ``shared_prefix_len`` > 0 turns the trace into the shared-prefix shape
+    real traffic has (system prompts / few-shot templates): every request
+    of a type starts with that type's fixed template prefix (page-aligned
+    at the runtime's block size), so the prefix cache has something to hit
+    and the per-type hit-rate loop into ``plan_span`` is exercised end to
+    end.  0 restores fully random prompts.
 
     ``shard=True`` executes each replica's (tp, pp) on a real per-replica
     device sub-mesh (needs >= ``chips`` jax devices, e.g. under
@@ -83,8 +91,15 @@ def run_real_spans(model: str = "opt-30b", chips: int = 6, n_spans: int = 2,
                         OrchestratorConfig(search_patience=8))
     runtime = ClusterRuntime(cfg, params, orch, blocks_per_chip=16,
                              seqs_per_chip=1, block_size=8, drain_steps=2,
-                             seed=seed, shard=shard)
+                             seed=seed, shard=shard,
+                             prefix_cache=prefix_cache)
     rng = np.random.RandomState(seed)
+    # one fixed template per type, drawn from a separate stream so toggling
+    # the mode doesn't perturb the per-request draws below
+    t_rng = np.random.RandomState(seed + 1)
+    templates = [t_rng.randint(0, cfg.vocab_size,
+                               shared_prefix_len).astype(np.int32)
+                 for _ in range(len(REAL_ARCHETYPES))]
     outcomes: list[RealSpanOutcome] = []
     rid = 0
     for s in range(n_spans):
@@ -99,6 +114,8 @@ def run_real_spans(model: str = "opt-30b", chips: int = 6, n_spans: int = 2,
             t = int(t)
             prompt = rng.randint(0, cfg.vocab_size,
                                  REAL_PROMPT_LEN[t]).astype(np.int32)
+            if shared_prefix_len:
+                prompt = np.concatenate([templates[t], prompt])
             runtime.submit(rid, prompt, REAL_NEW_TOKENS[t], type_id=t)
             rid += 1
             runtime.step(); runtime.step()

@@ -465,6 +465,54 @@ def test_router_routes_only_to_survivors_after_removal(cfg_params):
 
 
 # ---------------------------------------------------------------------------
+# Replica repair / rejoin: recovered capacity re-enters the planning budget
+# (inverse of observe_failures).
+# ---------------------------------------------------------------------------
+
+
+def test_repair_replica_rejoins_planning_budget(cfg_params):
+    cfg, params = cfg_params
+    orch = _orchestrator(6)
+    plan = orch.plan_span(ws([5, 300, 2, 3]))
+    assert plan.deployment.dp >= 2
+    rt = ClusterRuntime(cfg, params, orch, blocks_per_chip=16,
+                        seqs_per_chip=2, block_size=8, drain_steps=1)
+    rt.apply_plan(plan)
+    n_live = len(rt.replicas)
+    k = 0
+    rt.fail_replica(k, reason="test kill")
+    rt.finish_span()                  # feeds observe_failures
+    lost = rt.replicas[k].rc.chips
+    assert rt.lost_chips == lost
+    assert orch.cluster.chips == rt.total_chips - lost
+    assert orch.current is not None and orch.current.dp == n_live - 1
+
+    rt.repair_replica(k)
+    assert not rt.replicas[k].dead
+    assert rt.lost_chips == 0
+    assert rt.repaired_replicas == [k]
+    # the orchestrator got the inverse of observe_failures: full chip
+    # budget, full deployment, health re-aligned with a neutral entry
+    assert orch.cluster.chips == rt.total_chips
+    assert orch.current.dp == n_live
+    assert orch.current.replicas == tuple(h.rc for h in rt.replicas)
+    assert orch.health is None or (len(orch.health) == n_live
+                                   and orch.health[k] == 1.0)
+    # repairing a live replica is a no-op
+    rt.repair_replica(k)
+    assert rt.repaired_replicas == [k] and rt.lost_chips == 0
+    # the repaired replica serves traffic again
+    prompt = np.arange(8, dtype=np.int32)
+    for rid in range(4):
+        rt.submit(rid, prompt, 4)
+    rt.run_until_idle()
+    assert set(rt.results) == set(range(4))
+    # and the next plan solves over the restored budget without error
+    plan2 = orch.plan_span(ws([40, 10, 60, 40]))
+    assert plan2.deployment.total_chips <= rt.total_chips
+
+
+# ---------------------------------------------------------------------------
 # CI smoke: the orchestrator->runtime example path must keep working.
 # ---------------------------------------------------------------------------
 

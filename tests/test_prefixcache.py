@@ -1,0 +1,219 @@
+"""Prefix-cache correctness (ISSUE 7).
+
+Greedy token parity cache-on vs cache-off across every prefill/decode mode
+(one-shot, chunked prefill resuming mid-prompt, partial-page COW
+divergence, horizon decode over shared pages), evict -> restore roundtrip
+parity through the host tier, the counted-once / decref accounting
+contract on the shared allocator, and the planner-side hit-rate discount.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.costmodel import CostModel
+from repro.core.types import H100_SPEC, ReplicaConfig, WorkloadType
+from repro.models import init_params
+from repro.serving.engine import ServingEngine
+from repro.serving.kvcache import BlockPool, gather_tokens, scatter_tokens
+from repro.serving.prefixcache import PrefixCache
+from repro.serving.request import shared_prefix_prompts
+
+BS = 8
+
+
+@pytest.fixture(scope="module")
+def cfg_params():
+    cfg = get_smoke_config("yi-9b")
+    params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    return cfg, params
+
+
+def _jobs(cfg, n=6, prefix=24, tail=6, seed=3, n_templates=1):
+    prompts = shared_prefix_prompts(n, prefix, tail, vocab=cfg.vocab_size,
+                                    seed=seed, n_templates=n_templates)
+    return [(p, 4 + (i % 3)) for i, p in enumerate(prompts)]
+
+
+def _run(cfg, params, jobs, *, cache, num_blocks=64, max_seqs=2, **kw):
+    """Run jobs to completion; small ``max_seqs`` staggers admissions so
+    later requests admit after earlier ones published their pages."""
+    eng = ServingEngine(cfg, params, num_blocks=num_blocks, block_size=BS,
+                        max_seqs=max_seqs, prefix_cache=cache, **kw)
+    for rid, (p, n) in enumerate(jobs):
+        eng.submit(rid, p, n)
+    out = {r.rid: list(r.generated) for r in eng.run_to_completion()}
+    return out, eng
+
+
+# ---------------------------------------------------------------------------
+# greedy parity cache-on vs cache-off, per prefill/decode mode
+# ---------------------------------------------------------------------------
+
+
+def test_one_shot_parity_and_prefill_savings(cfg_params):
+    cfg, params = cfg_params
+    jobs = _jobs(cfg)
+    ref, eng_off = _run(cfg, params, jobs, cache=False)
+    got, eng_on = _run(cfg, params, jobs, cache=True)
+    assert got == ref
+    pc = eng_on.prefix_cache
+    assert pc is not None and pc.hits > 0
+    assert eng_on.prefill_tokens < eng_off.prefill_tokens, \
+        "cache hits did not reduce prefill-forward tokens"
+
+
+def test_chunked_prefill_resumes_mid_prompt(cfg_params):
+    cfg, params = cfg_params
+    jobs = _jobs(cfg)
+    ref, eng_off = _run(cfg, params, jobs, cache=False,
+                        prefill_chunk_tokens=BS)
+    got, eng_on = _run(cfg, params, jobs, cache=True,
+                       prefill_chunk_tokens=BS)
+    assert got == ref
+    assert eng_on.prefix_cache.hits > 0
+    assert eng_on.prefill_tokens < eng_off.prefill_tokens
+
+
+def test_partial_page_cow_divergence(cfg_params):
+    """Identical prompts: the match is capped at prompt_len - 1, which lands
+    mid-page, so the last matched page attaches by copy (COW).  The copy
+    must not perturb the shared original — every repeat stays at parity."""
+    cfg, params = cfg_params
+    rng = np.random.RandomState(11)
+    prompt = rng.randint(0, cfg.vocab_size, 3 * BS).astype(np.int32)
+    jobs = [(prompt, 4 + i) for i in range(3)]     # divergent decode lengths
+    ref, _ = _run(cfg, params, jobs, cache=False, max_seqs=1)
+    got, eng = _run(cfg, params, jobs, cache=True, max_seqs=1)
+    assert got == ref
+    # repeats prefilled only the final prompt token (the COW page carries
+    # the rest): 3*BS + 1 + 1 forward tokens total
+    assert eng.prefill_tokens == 3 * BS + 2
+    assert eng.prefix_cache.hits == 2
+
+
+def test_horizon_decode_over_shared_pages(cfg_params):
+    cfg, params = cfg_params
+    jobs = _jobs(cfg)
+    ref, _ = _run(cfg, params, jobs, cache=False, decode_horizon=4)
+    got, eng = _run(cfg, params, jobs, cache=True, decode_horizon=4)
+    assert got == ref
+    assert eng.prefix_cache.hits > 0
+
+
+# ---------------------------------------------------------------------------
+# host tier: evict -> restore roundtrip
+# ---------------------------------------------------------------------------
+
+
+def test_evict_restore_roundtrip_parity(cfg_params):
+    """A pool too small to keep two templates' cached pages resident forces
+    the LRU evict -> host tier -> restore roundtrip (the off-duty template's
+    pages get pushed out while the other runs, then restored on its next
+    request); token output must still match the cache-off run exactly.
+
+    Pure-template prompts (no unique tail): unique tail pages would absorb
+    all the eviction pressure and never be re-matched."""
+    cfg, params = cfg_params
+    jobs = _jobs(cfg, n=8, prefix=32, tail=0, n_templates=2)
+    ref, _ = _run(cfg, params, jobs, cache=False, num_blocks=64, max_seqs=1)
+    got, eng = _run(cfg, params, jobs, cache=True, num_blocks=9, max_seqs=1)
+    assert got == ref
+    pc = eng.prefix_cache
+    assert pc.evicted_bytes > 0, "tiny pool never evicted to the host tier"
+    assert pc.restored_bytes > 0, "no cache hit restored a host-tier page"
+
+
+def test_evict_restore_preserves_bytes(cfg_params):
+    """Pool-level fidelity: evicting a page to host and restoring it yields
+    bit-identical K/V, independent of any model forward."""
+    cfg, _ = cfg_params
+    pool = BlockPool(cfg, 4, BS, jnp.float32, 1)
+    pc = PrefixCache(pool)
+    (b,) = pool.allocator.alloc(1)
+    rng = np.random.RandomState(5)
+    L, H, D = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    k = jnp.asarray(rng.randn(L, BS, H, D), jnp.float32)
+    v = jnp.asarray(rng.randn(L, BS, H, D), jnp.float32)
+    scatter_tokens(pool, [b], k, v)
+    tokens = rng.randint(0, 100, BS).astype(np.int32)
+    pc.publish(tokens, [b])
+    pool.allocator.release([b])                 # index ref remains: cold
+    (e,) = pc.index.values()
+    pc._evict(e)
+    assert e.block is None and pool.allocator.n_free == 4
+    m = pc.match(tokens, BS)                    # full page may match here
+    cached, shared, cow = pc.attach(m)
+    assert cached == BS and e.block is not None
+    k2, v2 = gather_tokens(pool, [e.block], BS)
+    np.testing.assert_array_equal(np.asarray(k2), np.asarray(k))
+    np.testing.assert_array_equal(np.asarray(v2), np.asarray(v))
+
+
+# ---------------------------------------------------------------------------
+# index / refcount contract
+# ---------------------------------------------------------------------------
+
+
+def test_match_requires_identical_prefix(cfg_params):
+    cfg, _ = cfg_params
+    pool = BlockPool(cfg, 8, BS, jnp.float32, 1)
+    pc = PrefixCache(pool)
+    rng = np.random.RandomState(9)
+    stream = rng.randint(0, 100, 3 * BS).astype(np.int32)
+    blocks = pool.allocator.alloc(3)
+    pc.publish(stream, blocks)
+    # identical stream: all 3 pages match, capped at prompt_len - 1 — the
+    # cap lands mid-page, so the last page attaches copy-on-write
+    m = pc.match(stream, 3 * BS - 1)
+    assert m.cached_tokens == 3 * BS - 1 and m.cow
+    # divergence inside page 1 kills pages 1 and 2 (chained keys)
+    other = stream.copy()
+    other[BS + 2] += 1
+    m = pc.match(other, 3 * BS - 1)
+    assert m.cached_tokens == BS and not m.cow
+    # divergence at token 0: nothing matches
+    other2 = stream.copy()
+    other2[0] += 1
+    assert pc.match(other2, 3 * BS - 1).cached_tokens == 0
+
+
+def test_shared_pages_counted_once_and_decref(cfg_params):
+    """After a cached run drains: every sequence reservation is returned,
+    no block is double-freed, and the only remaining refs are the index's
+    own (cold pages) — dropping them returns the pool to fully free."""
+    cfg, params = cfg_params
+    _, eng = _run(cfg, params, _jobs(cfg), cache=True, num_blocks=64)
+    pool = eng.cache.pool
+    alloc = pool.allocator
+    assert pool.reserved == 0
+    assert alloc.pinned == 0, "a drained pool still counts pinned pages"
+    held = sum(1 for r in alloc.refs if r > 0)
+    assert held + alloc.n_free == pool.num_blocks
+    pc = eng.prefix_cache
+    assert pc.cold_blocks() == sum(1 for e in pc.index.values()
+                                   if e.block is not None)
+    pc.drop_cold()
+    assert alloc.n_free == pool.num_blocks
+
+
+# ---------------------------------------------------------------------------
+# planner-side: hit rate discounts prefill cost
+# ---------------------------------------------------------------------------
+
+
+def test_cached_frac_discounts_prefill_cost():
+    cm = CostModel(
+        __import__("repro.configs", fromlist=["get_config"])
+        .get_config("opt-30b").profile(), hw=H100_SPEC)
+    rc = ReplicaConfig(2, 1)
+    cold = WorkloadType(1024, 256, 10.0)
+    warm = cold.with_cached_frac(0.9)
+    p_cold = cm.replica_perf(rc, cold)
+    p_warm = cm.replica_perf(rc, warm)
+    assert p_warm.prefill_time < 0.25 * p_cold.prefill_time
+    assert p_warm.throughput > p_cold.throughput
+    # memory term unchanged: shared pages still occupy HBM
+    assert p_warm.b_eff == p_cold.b_eff
+    assert warm.with_cached_frac(1.5).cached_frac == 1.0
