@@ -73,12 +73,23 @@ def run(model: str = "opt-30b", chips: int = 16, trace_id: int = 1,
 def real_validation(model: str = "opt-30b", chips: int = 6,
                     n_spans: int = 2, requests_per_span: int = 6,
                     seed: int = 0) -> list[str]:
-    """Execute orchestrator plans on real engines; score plan vs reality."""
+    """Execute orchestrator plans on real engines; score plan vs reality.
+
+    Runs with the telemetry layer enabled, so beyond the per-span share
+    rows it reports the measured request-latency distributions (TTFT /
+    TPOT / queue delay p50/p95/p99 from ``Metrics``) and the decision
+    audit's prediction calibration error (mean L1 between each
+    ``plan_span``'s predicted replica token share and the share the
+    engines realized).
+    """
+    from repro.serving.telemetry import Telemetry
     from repro.serving.validation import run_real_spans
 
+    telemetry = Telemetry()
     outcomes, runtime = run_real_spans(
         model=model, chips=chips, n_spans=n_spans,
-        requests_per_span=requests_per_span, seed=seed)
+        requests_per_span=requests_per_span, seed=seed,
+        telemetry=telemetry)
     rows = []
     for o in outcomes:
         rows.append(
@@ -93,6 +104,20 @@ def real_validation(model: str = "opt-30b", chips: int = 6,
     rows.append(f"e2e-real/{model}/{chips}c/total,0,"
                 f"completed={done}/{n_spans * requests_per_span};switches="
                 f"{sum(1 for r in runtime.switch_reports[1:] if r.changed)}")
+    for name in ("ttft_s", "tpot_s", "queue_delay_s"):
+        h = telemetry.metrics.histograms.get(name)
+        if h is None:
+            continue
+        s = h.summary()
+        rows.append(f"e2e-real/{model}/{chips}c/{name},0,"
+                    f"n={s['count']};p50={s['p50'] * 1e3:.1f}ms"
+                    f";p95={s['p95'] * 1e3:.1f}ms"
+                    f";p99={s['p99'] * 1e3:.1f}ms")
+    calib = telemetry.audit.calibration_error()
+    if calib is not None:
+        joined = sum(1 for r in telemetry.audit.records if r.joined)
+        rows.append(f"e2e-real/{model}/{chips}c/calibration,0,"
+                    f"share_l1={calib:.3f};decisions={joined}")
     return rows
 
 

@@ -192,6 +192,68 @@ def horizon_sweep(cfg, params, new_tokens: int = HORIZON_NEW_TOKENS,
     return results, rows
 
 
+def telemetry_sweep(cfg, params, batch: int = 4, new_tokens: int = 17,
+                    rounds: int = 3) -> tuple[dict, list[str]]:
+    """Tracer overhead: identical decode runs with telemetry enabled vs the
+    ``NULL_TELEMETRY`` no-op default.
+
+    Events fire only at host-side boundaries (submit/admit/dispatch/sync/
+    retire), so the enabled run should cost within noise of the disabled
+    one; ``check_regression`` gates the measured ratio.  Rounds interleave
+    the two engines so machine-load drift hits both alike, and the
+    reported tokens/sec uses the per-round MEDIAN.
+    """
+    import jax.numpy as jnp
+
+    from repro.serving.engine import ServingEngine
+    from repro.serving.telemetry import Telemetry
+
+    engines = {
+        "disabled": ServingEngine(cfg, params, num_blocks=256, block_size=8,
+                                  max_seqs=batch, dtype=jnp.float32),
+        "enabled": ServingEngine(cfg, params, num_blocks=256, block_size=8,
+                                 max_seqs=batch, dtype=jnp.float32,
+                                 telemetry=Telemetry()),
+    }
+    rng = np.random.RandomState(0)
+    prompts = [rng.randint(0, cfg.vocab_size, PROMPT_LEN).astype(np.int32)
+               for _ in range(batch)]
+    rep = dict.fromkeys(engines, 0)
+    times: dict[str, list[float]] = {name: [] for name in engines}
+
+    def one_round(name: str, timed: bool) -> None:
+        eng = engines[name]
+        for i, p in enumerate(prompts):
+            eng.submit(rep[name] * batch + i, p, new_tokens)
+        rep[name] += 1
+        eng.step()                   # prefill (same length -> one batch)
+        t0 = time.perf_counter()
+        while eng.active:
+            eng.step()
+        if timed:
+            times[name].append(time.perf_counter() - t0)
+
+    for name in engines:             # warm pass compiles both paths
+        one_round(name, timed=False)
+    for _ in range(rounds):
+        for name in engines:
+            one_round(name, timed=True)
+    toks = batch * (new_tokens - 1)  # timed region covers decode only
+    tps = {name: toks / max(float(np.median(ts)), 1e-9)
+           for name, ts in times.items()}
+    overhead = tps["disabled"] / max(tps["enabled"], 1e-9)
+    result = {"batch": batch, "new_tokens": new_tokens,
+              "disabled_tps": tps["disabled"],
+              "enabled_tps": tps["enabled"],
+              "overhead_x": overhead,
+              "events": len(engines["enabled"].telemetry.tracer.events)}
+    rows = [f"engine/telemetry/disabled,0,tok_s={tps['disabled']:.2f}",
+            f"engine/telemetry/enabled,0,tok_s={tps['enabled']:.2f}"
+            f";events={result['events']}",
+            f"engine/telemetry/overhead,0,x={overhead:.3f}"]
+    return result, rows
+
+
 def main(fast: bool = True) -> list[str]:
     batches = (1, 2, 4, 8) if fast else (1, 2, 4, 8, 16)
     new_tokens = 8 if fast else 16
@@ -213,6 +275,8 @@ def main(fast: bool = True) -> list[str]:
         rows.append(f"engine/gain/b{batch},0,paged_x={gain:.2f}")
     horizon_results, horizon_rows = horizon_sweep(cfg, params)
     rows.extend(horizon_rows)
+    telemetry_result, telemetry_rows = telemetry_sweep(cfg, params)
+    rows.extend(telemetry_rows)
     BENCH_JSON.write_text(json.dumps({
         "bench": "engine_decode",
         "model": cfg.name,
@@ -225,6 +289,7 @@ def main(fast: bool = True) -> list[str]:
             "new_tokens": HORIZON_NEW_TOKENS,
             "results": horizon_results,
         },
+        "telemetry": telemetry_result,
     }, indent=2) + "\n")
     return rows
 

@@ -45,6 +45,7 @@ HORIZON_H8_MIN = 2.0            # CI-asserted in bench_engine too
 HANDOFF_VS_REPREFILL_MIN = 5.0  # CI-asserted in bench_switch too
 RECOVERY_HANDOFF_MIN = 5.0      # CI-asserted in bench_recovery too
 PREFIX_SAVINGS_MIN = 5.0        # CI-asserted in bench_prefix too
+TELEMETRY_OVERHEAD_MAX = 1.5    # enabled-tracer decode vs NULL_TELEMETRY
 
 
 def _load(d: pathlib.Path, name: str) -> dict:
@@ -110,6 +111,19 @@ def check_engine(base: dict, fresh: dict, tol: float) -> list[str]:
         if gain < HORIZON_H8_MIN:
             bad.append(f"horizon: H=8 only {gain:.2f}x per-step "
                        f"(needs >= {HORIZON_H8_MIN}x)")
+    # tracer overhead: a machine-independent ratio within the fresh run
+    # (baseline JSONs from before the telemetry layer lack the key)
+    ft = fresh.get("telemetry")
+    if ft is not None:
+        print(f"engine/telemetry/overhead: {ft['overhead_x']:.3f}x "
+              f"({ft['events']} events)")
+        if ft["overhead_x"] > TELEMETRY_OVERHEAD_MAX:
+            bad.append(f"telemetry: enabled tracer costs "
+                       f"{ft['overhead_x']:.2f}x the no-op path "
+                       f"(must stay <= {TELEMETRY_OVERHEAD_MAX}x)")
+        if ft["events"] <= 0:
+            bad.append("telemetry: enabled engine emitted no events — "
+                       "instrumentation unwired")
     return bad
 
 

@@ -15,6 +15,14 @@ span reports predicted vs achieved per-replica traffic shares — the
 simulator's predictions validated against actual engine behavior.
 
     PYTHONPATH=src python examples/serve_orchestrated.py --real --spans 2
+
+``--trace out.json`` (with ``--real``) additionally records the full
+request-lifecycle telemetry and writes a Chrome-trace-event JSON loadable
+in Perfetto / ``chrome://tracing``: one track per replica, per-request
+residency slices with flow arrows across migrations, switch phases on the
+orchestrator track.  The exported file is validated in-process (the same
+checks ``python -m repro.serving.telemetry`` runs) and a latency-histogram
+summary plus the planner's prediction calibration error are printed.
 """
 import argparse
 
@@ -74,10 +82,14 @@ def run_analytic(args) -> None:
 def run_real(args) -> None:
     from repro.serving.validation import run_real_spans
 
+    telemetry = None
+    if args.trace:
+        from repro.serving.telemetry import Telemetry
+        telemetry = Telemetry()
     outcomes, runtime = run_real_spans(
         model=args.model, chips=args.chips, n_spans=args.spans,
         requests_per_span=args.requests_per_span, seed=args.seed,
-        shard=args.shard)
+        shard=args.shard, telemetry=telemetry)
     mode = "sharded engines" if args.shard else "real engines"
     print(f"{runtime.cfg.name} ({mode}) planning as {args.model} on "
           f"{args.chips} chips")
@@ -119,6 +131,22 @@ def run_real(args) -> None:
           f"switches executed: "
           f"{sum(1 for r in runtime.switch_reports[1:] if r.changed)}")
     assert done == total, "some requests never completed"
+    if telemetry is not None:
+        from repro.serving.telemetry import (export_chrome_trace,
+                                             validate_chrome_trace)
+        obj = export_chrome_trace(telemetry, path=args.trace)
+        counts = validate_chrome_trace(obj)
+        print(f"\ntrace written to {args.trace}: {counts['events']} events, "
+              f"{counts['tracks']} tracks, {counts['slices']} slices, "
+              f"{counts['flows']} migration flows "
+              f"(load in Perfetto / chrome://tracing)")
+        print(telemetry.metrics.summary_table())
+        calib = telemetry.audit.calibration_error()
+        if calib is not None:
+            print(f"planner calibration error (mean L1, predicted vs "
+                  f"realized replica token share): {calib:.3f} over "
+                  f"{sum(1 for r in telemetry.audit.records if r.joined)} "
+                  f"joined decisions")
 
 
 def main(argv=None):
@@ -135,6 +163,9 @@ def main(argv=None):
                          "--xla_force_host_platform_device_count=8)")
     ap.add_argument("--requests-per-span", type=int, default=6)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", metavar="OUT.json", default=None,
+                    help="with --real: record lifecycle telemetry and write "
+                         "a Chrome-trace-event JSON (Perfetto-loadable)")
     args = ap.parse_args(argv)
     if args.real:
         run_real(args)

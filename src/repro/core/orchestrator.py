@@ -83,6 +83,11 @@ class Orchestrator:
         self.prefix_hit_rate: np.ndarray | None = None  # per-type EWMA [0, 1]
         self.inflight_lens: list[int] = []      # contexts a switch migrates
         self.inflight_shared_pool: bool = True  # page handoff available?
+        # decision audit sink (serving.telemetry.DecisionAudit): when set
+        # (by ClusterRuntime wiring a Telemetry bundle), every plan_span
+        # decision records its inputs + predicted share for later joining
+        # with the realized SpanReport into a calibration error
+        self.audit = None
 
     # -- observation (health / stragglers, realized rates) ---------------------
 
@@ -193,6 +198,7 @@ class Orchestrator:
             kv_s = self.switch_kv_seconds()
 
         result_scaled = False
+        margin = self.cfg.switch_hysteresis   # the gain bar actually applied
         if self.current is not None and not force:
             cur_res = assign_workloads(self.cm, self.current, workloads,
                                        capacity_scale=scale)
@@ -205,6 +211,7 @@ class Orchestrator:
             cur_cap = assign_workloads(self.cm, self.current, stressed,
                                        balance=False).throughput
             h = self.cfg.switch_hysteresis + kv_s / self.cfg.span_seconds
+            margin = h
             thr_gain = result.throughput > h * cur_res.throughput
             cap_gain = (result.throughput >= 0.999 * cur_res.throughput
                         and new_cap > h * cur_cap)
@@ -241,9 +248,16 @@ class Orchestrator:
                                self.cluster.hw)
             switch_s = plan.estimate_seconds(self.cluster.hw) + kv_s
         self.current, self.placed = new_dep, new_placed
-        return SpanPlan(new_dep, new_placed, result.fractions,
+        plan = SpanPlan(new_dep, new_placed, result.fractions,
                         result.throughput, switch_s, reload_s, changed,
                         time.time() - t0, kv_migration_seconds=kv_s)
+        if self.audit is not None:
+            # workloads already carry the cached_frac EWMA folded in above
+            self.audit.record_plan(plan, workloads, health=scale,
+                                   hysteresis_margin=margin,
+                                   kv_stall_s=kv_s,
+                                   switched=bool(changed))
+        return plan
 
     # -- fault tolerance / elasticity (Appendix C) -------------------------------
 

@@ -100,6 +100,45 @@ rebuilds the old configuration, restores every request onto its origin
 replica, and reverts the router and orchestrator state — the switch
 reports ``rolled_back=True`` instead of raising, and serving continues
 on the old deployment.
+
+Telemetry & how to read a trace
+-------------------------------
+Pass ``telemetry=`` (a ``serving.telemetry.Telemetry`` bundle) and the
+whole stack instruments itself: every engine is built with the bundle
+and its replica index as ``trace_id``, the orchestrator's ``audit``
+attribute is pointed at the bundle's ``DecisionAudit`` (so each
+``plan_span`` records workload mix / health / ``cached_frac`` EWMAs /
+hysteresis margin / predicted share, joined with the realized
+``SpanReport`` by ``finish_span``), and the cluster itself emits the
+events engines cannot see: ``migrate`` (per request, with src/dst
+replica and restore path), ``crash`` / ``recovered`` (with the recovery
+stall), terminal ``finish_log`` / ``shed`` for requests the cluster
+finishes or drops outside any engine, and ``switch_prepare`` /
+``switch_commit`` / ``switch_rollback`` begin/end pairs.  Stall
+histograms: ``switch_stall_s`` (wall time of a reconfiguring
+``apply_plan``) and ``recovery_stall_s`` (wall time of ``_fail``'s
+detect-export-restore trip).  See ``serving.telemetry`` for the full
+event schema.
+
+Export with ``telemetry.export_chrome_trace`` (or
+``examples/serve_orchestrated.py --real --trace out.json``) and load the
+JSON in Perfetto / chrome://tracing.  Reading it: one track per replica
+plus an ``orchestrator`` track.  A request's life on a replica is an
+``X`` slice named ``req <rid>`` (opened at admit, closed at
+retire/shed/migrate/crash); instants mark submit, first_token, shed and
+prefix hits; ``horizon`` slices are the engine's fused
+dispatch→sync windows (their args carry batch size and horizon).  A
+migration draws a flow arrow from the end of the request's slice on the
+source track to the start of its slice on the destination — a request
+that crashes, migrates twice, and finishes elsewhere reads as one chain
+of slices connected by arrows, ending in exactly one terminal instant.
+Switch phases nest as begin/end spans on the orchestrator track.
+
+``load_stats()`` returns one dict per replica: the engine's FROZEN
+``LOAD_STATS_KEYS`` schema (see ``serving.engine``'s docstring table)
+plus the cluster-level ``dead`` flag (replica masked out of routing /
+stepping until rebuilt).  ``tests/test_telemetry.py`` asserts the exact
+key set.
 """
 from __future__ import annotations
 
@@ -123,6 +162,7 @@ from repro.serving.kvcache import BlockPool
 from repro.serving.migration import (MigrationReport, migrate_batch,
                                      release_snapshot_pages)
 from repro.serving.router import FlowRouter, Router
+from repro.serving.telemetry import NULL_TELEMETRY
 
 
 class ClusterHangError(RuntimeError):
@@ -224,7 +264,8 @@ class ClusterRuntime:
                  decode_horizon: int = 1,
                  prefix_cache: bool = False,
                  shard: bool = False, devices=None,
-                 faults: FaultPlan | None = None, max_retries: int = 3):
+                 faults: FaultPlan | None = None, max_retries: int = 3,
+                 telemetry=None):
         """Args:
           cfg/params: the (one) model every replica serves — heterogeneity
             is in per-replica capacity, not weights.
@@ -263,6 +304,9 @@ class ClusterRuntime:
           max_retries: consecutive transient dispatch failures a replica
             may accumulate (retried with exponential backoff) before it is
             declared dead and its requests are recovered onto survivors.
+          telemetry: optional ``serving.telemetry.Telemetry`` bundle — see
+            the module docstring's telemetry section.  The default is the
+            disabled ``NULL_TELEMETRY`` (every emit point is a no-op).
         """
         if total_chips is None:
             if orch is None:
@@ -271,6 +315,11 @@ class ClusterRuntime:
         self.cfg = cfg
         self.params = params
         self.orch = orch
+        self.telemetry = telemetry if telemetry is not None else NULL_TELEMETRY
+        if orch is not None and self.telemetry.enabled:
+            # plan_span decisions audit into the same bundle finish_span
+            # joins realized SpanReports into (calibration error)
+            orch.audit = self.telemetry.audit
         self.total_chips = total_chips
         self.blocks_per_chip = blocks_per_chip
         self.seqs_per_chip = seqs_per_chip
@@ -351,8 +400,8 @@ class ClusterRuntime:
         max_bps = max(1, min(cfg_cap, quota))
         return max_seqs, quota, max_bps
 
-    def _build_engine(self, rc: ReplicaConfig,
-                      devices=None) -> ServingEngine:
+    def _build_engine(self, rc: ReplicaConfig, devices=None,
+                      index: int = 0) -> ServingEngine:
         max_seqs, quota, max_bps = self._sizing(rc)
         common = dict(
             block_size=self.block_size, max_seqs=max_seqs, dtype=self.dtype,
@@ -360,7 +409,8 @@ class ClusterRuntime:
             attn_impl=self.attn_impl, max_blocks_per_seq=max_bps,
             prefill_chunk_tokens=self.prefill_chunk_tokens,
             decode_horizon=self.decode_horizon,
-            prefix_cache=self.prefix_cache)
+            prefix_cache=self.prefix_cache,
+            telemetry=self.telemetry, trace_id=index)
         if not self.shard:
             return ServingEngine(self.cfg, self.params, pool=self.pool,
                                  kv_quota=quota, **common)
@@ -515,10 +565,16 @@ class ClusterRuntime:
                    torn_down) -> SwitchReport:
         fault = (self.faults.switch_fault(self._switch_count)
                  if self.faults is not None else None)
+        tm = self.telemetry
+        reconfiguring = bool(changed) or bool(torn_down)
+        t_switch = tm.clock() if (tm.enabled and reconfiguring) else None
 
         # PREPARE: build every new engine before a single live engine is
         # touched — a build failure aborts with the deployment unchanged
         built: dict[int, ServingEngine] = {}
+        if tm.enabled and reconfiguring:
+            tm.emit("switch_prepare", phase="begin",
+                    span=self._switch_count)
         try:
             if fault is not None and fault.kind == "switch_build":
                 raise TransientDispatchError(
@@ -526,13 +582,19 @@ class ClusterRuntime:
                     f"(switch {self._switch_count})")
             for k in changed:
                 built[k] = self._build_engine(
-                    new_rcs[k], slices[k] if self.shard else None)
+                    new_rcs[k], slices[k] if self.shard else None, index=k)
         except Exception as e:   # noqa: BLE001 — the abort must never wedge
+            if tm.enabled and reconfiguring:
+                tm.emit("switch_prepare", phase="end",
+                        span=self._switch_count)
             report = SwitchReport([], 0, 0, 0, rolled_back=True,
                                   failure=f"prepare: {e}")
             self._revert_orchestrator()
             self.switch_reports.append(report)
             return report
+        if tm.enabled and reconfiguring:
+            tm.emit("switch_prepare", phase="end", span=self._switch_count)
+            tm.emit("switch_commit", phase="begin", span=self._switch_count)
 
         # 1) drain window: short in-flight sequences finish on their source
         drained = 0
@@ -571,6 +633,7 @@ class ClusterRuntime:
         #    snapshot only goes to a replica whose context ceiling can hold
         #    it (heterogeneous replicas differ here).
         mig = MigrationReport()
+        src_idx = {rid: hh.index for rid, hh in origin.items()}
         try:
             by_dest, dropped = self._route_snapshots(migrate)
             mig.dropped += len(dropped)
@@ -581,7 +644,9 @@ class ClusterRuntime:
                     raise TransientDispatchError(
                         f"injected migration failure mid-switch "
                         f"(switch {self._switch_count})")
-                mig.merge(migrate_batch(self.replicas[k].engine, group))
+                rep_k = migrate_batch(self.replicas[k].engine, group)
+                self._emit_migrations(rep_k, k, src_idx)
+                mig.merge(rep_k)
             if inject and not groups:
                 # the fault is scheduled by apply_plan ordinal: it must fire
                 # even on a switch with nothing to migrate, or a seeded plan
@@ -590,8 +655,20 @@ class ClusterRuntime:
                     f"injected migration failure mid-switch "
                     f"(switch {self._switch_count})")
         except Exception as e:   # noqa: BLE001 — roll back, never wedge
-            return self._rollback_switch(old, old_devices, torn_down,
-                                         origin, migrate, drained, e)
+            if tm.enabled and reconfiguring:
+                tm.emit("switch_commit", phase="end",
+                        span=self._switch_count)
+                tm.emit("switch_rollback", phase="begin",
+                        span=self._switch_count)
+            try:
+                return self._rollback_switch(old, old_devices, torn_down,
+                                             origin, migrate, drained, e)
+            finally:
+                if tm.enabled and reconfiguring:
+                    tm.emit("switch_rollback", phase="end",
+                            span=self._switch_count)
+                    tm.metrics.observe("switch_stall_s",
+                                       tm.clock() - t_switch)
         report = SwitchReport(
             changed, drained, mig.migrated, mig.requeued,
             handoff=mig.handoff, copied=mig.copied,
@@ -600,6 +677,9 @@ class ClusterRuntime:
             recompute_tokens=mig.recompute_tokens, dropped=mig.dropped)
         self.switch_reports.append(report)
         self._applied_fractions = [list(row) for row in plan.fractions]
+        if tm.enabled and reconfiguring:
+            tm.emit("switch_commit", phase="end", span=self._switch_count)
+            tm.metrics.observe("switch_stall_s", tm.clock() - t_switch)
         return report
 
     def _rollback_switch(self, old, old_devices, torn_down, origin,
@@ -627,7 +707,8 @@ class ClusterRuntime:
         #    handles (and their span counters) survive, only engines swap
         for h in torn_down:
             h.engine = self._build_engine(
-                h.rc, old_devices.get(h.index) if self.shard else None)
+                h.rc, old_devices.get(h.index) if self.shard else None,
+                index=h.index)
             self._wire_faults(h)
         self.replicas = list(old)
         if self.shard:
@@ -639,17 +720,23 @@ class ClusterRuntime:
         rb = MigrationReport()
         by_origin: dict[int, list[InflightSnapshot]] = {}
         index_map = {h.index: h for h in old}
+        tm = self.telemetry
         for s in recovered:
             h = origin.get(s.rid)
             if h is None or h.dead:        # no origin to return to: shed
                 release_snapshot_pages(s)
                 self.shed_rids.append(s.rid)
                 rb.dropped += 1
+                if tm.enabled:
+                    tm.emit("shed", rid=s.rid, reason="capacity")
+                    tm.metrics.count("shed_capacity")
                 continue
             by_origin.setdefault(h.index, []).append(s)
             self.rid_owner[s.rid] = h.index
         for k, group in sorted(by_origin.items()):
-            rb.merge(migrate_batch(index_map[k].engine, group))
+            rep_k = migrate_batch(index_map[k].engine, group)
+            self._emit_migrations(rep_k, k, {})
+            rb.merge(rep_k)
         self._revert_orchestrator()
         report = SwitchReport([], drained, rb.migrated, rb.requeued,
                               handoff=rb.handoff, copied=rb.copied,
@@ -661,6 +748,22 @@ class ClusterRuntime:
                               rolled_back=True, failure=f"commit: {err}")
         self.switch_reports.append(report)
         return report
+
+    def _emit_migrations(self, rep: MigrationReport, dst: int,
+                         src_idx: dict[int, int]) -> None:
+        """Telemetry: one ``migrate`` event per restored request.
+
+        ``src_idx`` maps rid -> source replica index; requests without an
+        entry (e.g. a rollback return trip of a request that never left)
+        fall back to ``dst`` — the trace exporter overrides the source
+        with the request's actually-open residency track anyway."""
+        tm = self.telemetry
+        if not tm.enabled:
+            return
+        for rid, (path, pages) in rep.paths.items():
+            tm.emit("migrate", rid=rid, src=src_idx.get(rid, dst),
+                    dst=dst, path=path, pages=pages)
+            tm.metrics.count(f"migrate_{path}")
 
     def _revert_orchestrator(self) -> None:
         """Point the orchestrator's deployment state back at what the
@@ -705,7 +808,8 @@ class ClusterRuntime:
                 f"new tokens exceeds every replica's context ceiling")
         self.replicas[k].engine.submit(rid, prompt, max_new_tokens,
                                        ttft_deadline=ttft_deadline,
-                                       tpot_deadline=tpot_deadline)
+                                       tpot_deadline=tpot_deadline,
+                                       type_id=type_id)
         # book-keep only after the engine accepted the request, so rejected
         # submissions don't pollute the observed-rate feedback
         self.rid_type[rid] = type_id
@@ -902,6 +1006,12 @@ class ClusterRuntime:
         """
         if h.dead:
             return MigrationReport()
+        tm = self.telemetry
+        t_fail = tm.clock() if tm.enabled else 0.0
+        if tm.enabled:
+            tm.emit("crash", replica=h.index, step=self._tick,
+                    exc=type(err).__name__)
+            tm.metrics.count("replica_crashes")
         h.dead = True
         self._span_dead.append(h.index)
         self.dead_replicas.append(h.index)
@@ -934,8 +1044,13 @@ class ClusterRuntime:
                 # chaos model fails replicas, not the silicon under them)
                 self._dead_devices[h.index] = tuple(slice_)
                 self.devices = [d for d in self.devices if d not in gone]
-        rep = self._recover(snaps)
+        rep = self._recover(snaps, src=h.index)
         self._span_recovery.merge(rep)
+        if tm.enabled:
+            stall = tm.clock() - t_fail
+            tm.metrics.observe("recovery_stall_s", stall)
+            tm.emit("recovered", replica=h.index, n=len(snaps),
+                    stall_s=stall)
         return rep
 
     def repair_replica(self, k: int) -> None:
@@ -962,7 +1077,7 @@ class ClusterRuntime:
                     f"(its devices were never recorded at failure)")
             self.devices.extend(devices)
             self._replica_devices[k] = tuple(devices)
-        h.engine = self._build_engine(h.rc, devices)
+        h.engine = self._build_engine(h.rc, devices, index=k)
         self._wire_faults(h)
         h.dead = False
         h.failures = 0
@@ -981,16 +1096,20 @@ class ClusterRuntime:
             self.orch.observe_rejoin(live, self.surviving_chips,
                                      health_index=idx)
 
-    def _recover(self, snaps: list[InflightSnapshot]) -> MigrationReport:
+    def _recover(self, snaps: list[InflightSnapshot],
+                 src: int = -1) -> MigrationReport:
         """Restore a dead replica's requests on survivors, cheapest path
-        first (the same migration machinery planned switches use)."""
+        first (the same migration machinery planned switches use).
+        ``src`` labels the originating (dead) replica on trace events."""
         rep = MigrationReport()
         if not snaps:
             return rep
         by_dest, dropped = self._route_snapshots(snaps)
         rep.dropped += len(dropped)
         for k, group in sorted(by_dest.items()):
-            rep.merge(migrate_batch(self.replicas[k].engine, group))
+            rep_k = migrate_batch(self.replicas[k].engine, group)
+            self._emit_migrations(rep_k, k, {s.rid: src for s in group})
+            rep.merge(rep_k)
         return rep
 
     def _route_snapshots(self, snaps: list[InflightSnapshot]
@@ -1011,12 +1130,19 @@ class ClusterRuntime:
                     s.rid, np.asarray(s.prompt, np.int32),
                     s.max_new_tokens, generated=list(s.generated),
                     done=True))
+                if self.telemetry.enabled:
+                    self.telemetry.emit("finish_log", rid=s.rid,
+                                        tokens=len(s.generated))
                 continue
             k = self._route(self.rid_type.get(s.rid, 0), ctx, remaining)
             if k < 0:
                 release_snapshot_pages(s)
                 self.shed_rids.append(s.rid)
                 dropped.append(s.rid)
+                if self.telemetry.enabled:
+                    self.telemetry.emit("shed", rid=s.rid,
+                                        reason="capacity")
+                    self.telemetry.metrics.count("shed_capacity")
                 continue
             by_dest.setdefault(k, []).append(s)
             self.rid_owner[s.rid] = k
@@ -1092,6 +1218,10 @@ class ClusterRuntime:
                             prefix_hits=d_hits, prefix_misses=d_miss,
                             prefix_evicted_bytes=d_evict,
                             prefix_restored_bytes=d_restore)
+        if self.telemetry.enabled:
+            # join realized span numbers with the matching plan decision
+            # (FIFO) so the audit can score prediction calibration
+            self.telemetry.audit.record_realized(report)
         if self.orch is not None:
             self.orch.observe_health(achieved)
             self.orch.observe_rates(self._span_type_counts)

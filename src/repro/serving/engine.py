@@ -85,12 +85,47 @@ page-handoff migration is asserted against it in tests.
 Engines can share one device ``BlockPool`` (``pool=`` + ``kv_quota=``): the
 cluster partitions a single allocation across heterogeneous replicas
 instead of each replica reserving a max-size cache.
+
+Telemetry (``telemetry=``, see ``repro.serving.telemetry``): the engine
+emits lifecycle events (submit / admit / prefix_hit / prefill_chunk /
+first_token / dispatch / sync / retire / shed) and records TTFT / TPOT /
+queue-delay histograms, all at host-side scheduling boundaries — never
+inside jitted code.  ``clock=`` overrides the time source (defaulting to
+the telemetry bundle's clock, itself ``time.monotonic``), so traces and
+TTFT/TPOT deadlines share one injectable clock in tests.  The default
+``NULL_TELEMETRY`` is disabled end to end: every emit point is a guarded
+no-op, keeping the uninstrumented hot path unchanged.
+
+``load_stats()`` schema — FROZEN: these keys are consumed by
+``FlowRouter``, ``ClusterRuntime``'s health loop, and the benchmarks;
+``tests/test_telemetry.py`` asserts the exact key set, so additions are
+fine but renames/removals are breaking:
+
+=======================  ====================================================
+key                      meaning
+=======================  ====================================================
+waiting                  queued requests not yet admitted
+active                   requests holding slots (prefilling or decoding)
+max_seqs                 slot capacity of this replica
+free_blocks              KV pool blocks free right now (this view's quota)
+free_blocks_effective    free + cold prefix-cache pages evictable on demand
+tokens_out               total tokens emitted since construction
+steps                    scheduler iterations since construction
+prefill_tokens           tokens run through a prefill forward (see above)
+prefix_hits              admissions that reused >= 1 cached page
+prefix_misses            admissions with no cached prefix
+prefix_hit_tokens        prompt tokens served from the prefix cache
+prefix_evicted_bytes     KV bytes moved device -> host tier
+prefix_restored_bytes    KV bytes moved host tier -> device
+shed                     requests shed for SLO (TTFT queue + TPOT mid-flight)
+decode_syncs             fused-decode device->host syncs (one per horizon)
+load                     (waiting + active) / max_seqs
+=======================  ====================================================
 """
 from __future__ import annotations
 
 import contextlib
 import dataclasses
-import time
 
 import jax
 import jax.numpy as jnp
@@ -105,6 +140,17 @@ from repro.pshard import sharding_rules
 from repro.serving.kvcache import (BlockPool, PagedKVCache, copy_blocks,
                                    relayout_blocks, reshard_blocks)
 from repro.serving.prefixcache import PrefixCache
+from repro.serving.telemetry import NULL_TELEMETRY
+
+# the frozen load_stats() key set (see the module docstring table);
+# ClusterRuntime.load_stats adds "dead" on top of these
+LOAD_STATS_KEYS = frozenset({
+    "waiting", "active", "max_seqs", "free_blocks",
+    "free_blocks_effective", "tokens_out", "steps", "prefill_tokens",
+    "prefix_hits", "prefix_misses", "prefix_hit_tokens",
+    "prefix_evicted_bytes", "prefix_restored_bytes", "shed",
+    "decode_syncs", "load",
+})
 
 
 def resolve_attn_impl(attn_impl: str) -> tuple[str, bool]:
@@ -140,6 +186,8 @@ class EngineRequest:
     # whose average pace exceeds the budget is shed (see ``_shed_slow``)
     tpot_budget: float | None = None
     t_first: float | None = None
+    # engine-clock submission time (telemetry: queue delay / TTFT)
+    t_submit: float | None = None
 
     @property
     def prefill_tokens(self) -> np.ndarray:
@@ -216,7 +264,8 @@ class ServingEngine:
                  prefill_chunk_tokens: int | None = None,
                  decode_horizon: int = 1,
                  prefix_cache: bool = False,
-                 mesh=None, shard_plan=None):
+                 mesh=None, shard_plan=None,
+                 clock=None, telemetry=None, trace_id: int = 0):
         """``mesh`` + ``shard_plan`` turn on real intra-replica model
         parallelism: params are placed with ``param_pspecs`` shardings, the
         paged K/V pool is sharded along its KV-head (tp) and layer (pp)
@@ -309,9 +358,15 @@ class ServingEngine:
         # chunked-prefill round-robin rotation pointer
         self._chunk_rr = 0
         # SLO shedding: rids rejected because their TTFT budget was already
-        # blown while still waiting; ``clock`` is injectable for tests
+        # blown while still waiting
         self.shed_rids: list[int] = []
-        self.clock = time.monotonic
+        # one time source for deadlines, TPOT pacing, AND trace events:
+        # ``clock`` wins, else the telemetry bundle's clock (time.monotonic
+        # on the disabled default) — inject a fake via either for
+        # deterministic tests
+        self.telemetry = telemetry if telemetry is not None else NULL_TELEMETRY
+        self.trace_id = trace_id          # replica index on the trace
+        self.clock = clock if clock is not None else self.telemetry.clock
         # chaos injection: when set, called as ``fault_hook("admit")`` at
         # the top of the admission path (before any state is mutated) and
         # may raise (e.g. an injected pool-reservation OOM).  The cluster
@@ -329,6 +384,9 @@ class ServingEngine:
         if prefix_cache and cfg.has_attn and not cfg.has_ssm:
             self.prefix_cache = (self.cache.pool.prefix_cache
                                  or PrefixCache(self.cache.pool))
+            if self.telemetry.enabled:
+                # pool-scoped sink: evict/restore events carry replica=-1
+                self.prefix_cache.telemetry = self.telemetry
         # (rid, cached_tokens, ctx_tokens) per admission — the cluster
         # drains these into per-workload-type hit rates for the planner
         self.prefix_events: list[tuple[int, int, int]] = []
@@ -446,7 +504,8 @@ class ServingEngine:
 
     def submit(self, rid: int, prompt: np.ndarray, max_new_tokens: int,
                ttft_deadline: float | None = None,
-               tpot_deadline: float | None = None) -> None:
+               tpot_deadline: float | None = None,
+               type_id: int = -1) -> None:
         """Queue a request.  ``ttft_deadline`` (engine-clock absolute time)
         arms SLO-aware shedding: if the deadline passes while the request is
         still waiting, it is rejected instead of admitted (its TTFT budget
@@ -454,12 +513,20 @@ class ServingEngine:
         ``tpot_deadline`` (seconds per output token) arms the decode-side
         counterpart: a request whose average token pace, measured from its
         first token, exceeds the budget is shed mid-flight (its slot and
-        pages go to requests that can still meet their SLO)."""
+        pages go to requests that can still meet their SLO).  ``type_id``
+        only labels the request's workload type on telemetry events."""
         prompt = np.asarray(prompt, np.int32)
         self._validate(len(prompt), max_new_tokens, rid)
-        self.waiting.append(EngineRequest(rid, prompt, max_new_tokens,
-                                          deadline=ttft_deadline,
-                                          tpot_budget=tpot_deadline))
+        req = EngineRequest(rid, prompt, max_new_tokens,
+                            deadline=ttft_deadline,
+                            tpot_budget=tpot_deadline)
+        tm = self.telemetry
+        if tm.enabled:
+            req.t_submit = self.clock()
+            tm.emit("submit", rid=rid, replica=self.trace_id,
+                    type_id=type_id, prompt_len=len(prompt),
+                    max_new=max_new_tokens)
+        self.waiting.append(req)
 
     def _free_slots(self) -> list[int]:
         return [s for s in range(self.max_seqs) if s not in self.active]
@@ -655,7 +722,10 @@ class ServingEngine:
         self.cache.release_all()
 
     def load_stats(self) -> dict:
-        """Occupancy snapshot for routers / the cluster health loop."""
+        """Occupancy snapshot for routers / the cluster health loop.
+
+        The key set is FROZEN (``LOAD_STATS_KEYS``): see the module
+        docstring table; ``tests/test_telemetry.py`` asserts it."""
         pc = self.prefix_cache
         return {
             "waiting": len(self.waiting),
@@ -699,9 +769,14 @@ class ServingEngine:
             return
         now = self.clock()
         keep = []
+        tm = self.telemetry
         for r in self.waiting:
             if r.deadline is not None and now > r.deadline:
                 self.shed_rids.append(r.rid)
+                if tm.enabled:
+                    tm.emit("shed", rid=r.rid, replica=self.trace_id,
+                            reason="ttft")
+                    tm.metrics.count("shed_ttft")
             else:
                 keep.append(r)
         self.waiting = keep
@@ -740,6 +815,21 @@ class ServingEngine:
                 req.prefill_pos = cached   # prefill starts past the prefix
             if self.prefix_cache is not None:
                 self.prefix_events.append((req.rid, cached, ctx))
+            tm = self.telemetry
+            if tm.enabled:
+                now = self.clock()
+                delay = (now - req.t_submit
+                         if req.t_submit is not None else 0.0)
+                tm.emit("admit", rid=req.rid, replica=self.trace_id,
+                        reserved_bytes=(self.cache.seq_reserved.get(
+                            req.slot, 0) * self.cache.pool.page_nbytes),
+                        cached_tokens=cached, queue_delay_s=delay)
+                tm.metrics.observe("queue_delay_s", delay)
+                if cached:
+                    tm.emit("prefix_hit", rid=req.rid,
+                            replica=self.trace_id, tokens=cached,
+                            pages=len(shared) + (1 if cow is not None
+                                                 else 0))
             self.active[req.slot] = req
             admitted.append(req)
         return admitted
@@ -761,6 +851,21 @@ class ServingEngine:
             stream = np.concatenate(
                 [stream, np.asarray(r.generated, np.int32)])
         self.prefix_cache.publish(stream[:resident], blocks)
+
+    def _note_first_token(self, r: EngineRequest, now: float) -> None:
+        """Telemetry: a request's FIRST ever token just materialized.
+
+        Callers gate on ``not r.generated`` *before* appending — a migrated
+        request re-prefilling ``prompt + generated`` produced its first
+        token on its origin replica, so it must not re-enter the TTFT
+        histogram here."""
+        tm = self.telemetry
+        if not tm.enabled:
+            return
+        ttft = now - r.t_submit if r.t_submit is not None else 0.0
+        tm.emit("first_token", rid=r.rid, replica=self.trace_id,
+                ttft_s=ttft)
+        tm.metrics.observe("ttft_s", ttft)
 
     def _run_prefill(self, reqs: list[EngineRequest]) -> None:
         # bucket by prompt length: same-length batches need no padding, so
@@ -786,8 +891,11 @@ class ServingEngine:
                     self.cache.conv = self.cache.conv.at[:, r.slot].set(
                         cache.conv[:, i])
                 r.prefill_pos = pl
+                fresh = not r.generated
                 r.generated.append(int(first[i]))
                 self.tokens_out += 1
+                if fresh:
+                    self._note_first_token(r, t_first)
                 self._publish(r.slot, r)
 
     def _resume_prefill(self, reqs: list[EngineRequest]) -> None:
@@ -821,8 +929,11 @@ class ServingEngine:
             r.prefill_pos = len(toks)
             first = self._pick(logits)
             r.t_first = self.clock()
+            fresh = not r.generated
             r.generated.append(int(first[0]))
             self.tokens_out += 1
+            if fresh:
+                self._note_first_token(r, r.t_first)
             self._publish(r.slot, r)
 
     def _advance_chunked(self) -> None:
@@ -877,11 +988,18 @@ class ServingEngine:
             self.prefill_tokens += n_valid
             budget -= n_valid
             r.prefill_pos = start + n_valid
+            if self.telemetry.enabled:
+                self.telemetry.emit("prefill_chunk", rid=r.rid,
+                                    replica=self.trace_id, tokens=n_valid,
+                                    pos=r.prefill_pos)
             if r.prefill_pos >= len(toks_all):   # final chunk emits token 1
                 first = self._pick(logits)
                 r.t_first = self.clock()
+                fresh = not r.generated
                 r.generated.append(int(first[0]))
                 self.tokens_out += 1
+                if fresh:
+                    self._note_first_token(r, r.t_first)
                 self._publish(slot, r)
 
     def _pick(self, logits: jax.Array) -> np.ndarray:
@@ -946,6 +1064,9 @@ class ServingEngine:
         self._sample_step += horizon
         self.horizon_counts[horizon] = self.horizon_counts.get(horizon, 0) + 1
         self.last_horizon = horizon
+        if self.telemetry.enabled:
+            self.telemetry.emit("dispatch", replica=self.trace_id,
+                                n=B, h=horizon)
         with self._rules_ctx():
             toks, k, v, lens_dev, ssm, conv = self._fused(
                 self.params, self.cache.k, self.cache.v,
@@ -966,6 +1087,10 @@ class ServingEngine:
             r = self.active[s]
             r.generated.extend(int(t) for t in toks[i, :pending.horizon])
             self.tokens_out += pending.horizon
+        if self.telemetry.enabled:
+            self.telemetry.emit("sync", replica=self.trace_id,
+                                n=len(pending.slots),
+                                tokens=len(pending.slots) * pending.horizon)
 
     def _run_decode(self, slots: list[int], horizon: int = 1) -> None:
         """Device-resident paged decode over the given slots (gather-free):
@@ -1007,6 +1132,7 @@ class ServingEngine:
 
     def _retire(self) -> list[EngineRequest]:
         done = []
+        tm = self.telemetry
         for s in list(self.active):
             r = self.active[s]
             if len(r.generated) >= r.max_new_tokens:
@@ -1015,6 +1141,14 @@ class ServingEngine:
                 self.cache.release_slot(s)
                 del self.active[s]
                 done.append(r)
+                if tm.enabled:
+                    now = self.clock()
+                    tm.emit("retire", rid=r.rid, replica=self.trace_id,
+                            tokens=len(r.generated))
+                    if r.t_first is not None and len(r.generated) > 1:
+                        tm.metrics.observe(
+                            "tpot_s", (now - r.t_first)
+                            / (len(r.generated) - 1))
         return done
 
     # -- main loop ---------------------------------------------------------------
@@ -1087,6 +1221,11 @@ class ServingEngine:
             pace = (now - r.t_first) / (len(r.generated) - 1)
             if pace > r.tpot_budget:
                 self.shed_rids.append(r.rid)
+                if self.telemetry.enabled:
+                    self.telemetry.emit("shed", rid=r.rid,
+                                        replica=self.trace_id,
+                                        reason="tpot")
+                    self.telemetry.metrics.count("shed_tpot")
                 self._publish(s, r)   # evicted work still warms the cache
                 self.cache.release_slot(s)
                 del self.active[s]

@@ -170,6 +170,17 @@ class BlockPool:
             return None
         return (self.mesh, self.kv_spec)
 
+    @property
+    def page_nbytes(self) -> int:
+        """Device bytes one K+V page holds across all layers: one page in
+        both k and v is [L, Hkv, block, D] at pool dtype (0 for attn-free
+        archs).  Telemetry and the prefix cache's host tier both size
+        transfers with this."""
+        if self.k is None:
+            return 0
+        per = int(np.prod(self.k.shape[2:])) * self.k.dtype.itemsize
+        return 2 * per * int(self.k.shape[0])
+
 
 @dataclasses.dataclass
 class PagedKVCache:

@@ -54,6 +54,10 @@ class MigrationReport:
     # shed instead of wedging the cluster (never set by planned switches,
     # whose stranding pre-check runs before any engine is touched)
     dropped: int = 0
+    # per-request restore path: rid -> (path, pages-or-recompute-tokens)
+    # where path in {"handoff", "copy", "reprefill", "requeue"}; telemetry
+    # joins this with src/dst replica indices for per-request trace flows
+    paths: dict = dataclasses.field(default_factory=dict)
 
     @property
     def migrated(self) -> int:
@@ -62,7 +66,11 @@ class MigrationReport:
 
     def merge(self, other: "MigrationReport") -> None:
         for f in dataclasses.fields(self):
-            setattr(self, f.name, getattr(self, f.name) + getattr(other, f.name))
+            a, b = getattr(self, f.name), getattr(other, f.name)
+            if isinstance(a, dict):
+                a.update(b)
+            else:
+                setattr(self, f.name, a + b)
 
 
 def release_snapshot_pages(snap: InflightSnapshot) -> None:
@@ -110,17 +118,22 @@ def migrate_batch(dst: ServingEngine, snaps: list[InflightSnapshot]
         if same_pool:
             report.handoff += 1
             report.pages_handoff += n
+            report.paths[s.rid] = ("handoff", n)
         else:
             report.copied += 1
             report.pages_copied += n
+            report.paths[s.rid] = ("copy", n)
     fallback = rejected + rest
     for s in fallback:
         release_snapshot_pages(s)
         if s.generated:
             report.reprefilled += 1
-            report.recompute_tokens += len(s.prompt) + len(s.generated)
+            tokens = len(s.prompt) + len(s.generated)
+            report.recompute_tokens += tokens
+            report.paths[s.rid] = ("reprefill", tokens)
         else:
             report.requeued += 1
+            report.paths[s.rid] = ("requeue", 0)
     if fallback:
         dst.import_inflight(fallback)
     return report

@@ -105,6 +105,9 @@ class PrefixCache:
         self.evicted_bytes = 0        # device -> host tier
         self.restored_bytes = 0       # host tier -> device
         self.dropped_pages = 0        # cold pages freed without a host copy
+        # telemetry sink for evict/restore events; engines sharing the pool
+        # point this at the cluster's Telemetry (pool-scoped: replica=-1)
+        self.telemetry = None
 
     # -- lookup / attach -------------------------------------------------------
 
@@ -218,20 +221,19 @@ class PrefixCache:
     # -- host tier -------------------------------------------------------------
 
     def _page_nbytes(self) -> int:
-        k = self.pool.k
-        if k is None:
-            return 0
-        # one page in both k and v: [L, Hkv, bs, D] at pool dtype
-        return 2 * int(np.prod(k.shape[2:])) * k.shape[0] * k.dtype.itemsize
+        return self.pool.page_nbytes
 
     def _evict(self, e: _Entry) -> None:
         """Move one cold page to the host store and free its device block."""
         bs = self.pool.block_size
         k, v = gather_tokens(self.pool, [e.block], bs)
         e.host = (np.asarray(k), np.asarray(v))
-        self.evicted_bytes += e.host[0].nbytes + e.host[1].nbytes
+        nbytes = e.host[0].nbytes + e.host[1].nbytes
+        self.evicted_bytes += nbytes
         self.pool.allocator.release([e.block])
         e.block = None
+        if self.telemetry is not None and self.telemetry.enabled:
+            self.telemetry.emit("evict", pages=1, bytes=nbytes)
 
     def _restore(self, e: _Entry) -> None:
         """Bring a host-tiered page back into a fresh device block."""
@@ -242,9 +244,12 @@ class PrefixCache:
             raise MemoryError("no device block free to restore cached page")
         (b,) = alloc.alloc(1)
         scatter_tokens(self.pool, [b], e.host[0], e.host[1])
-        self.restored_bytes += e.host[0].nbytes + e.host[1].nbytes
+        nbytes = e.host[0].nbytes + e.host[1].nbytes
+        self.restored_bytes += nbytes
         e.block = b
         e.host = None
+        if self.telemetry is not None and self.telemetry.enabled:
+            self.telemetry.emit("restore", pages=1, bytes=nbytes)
 
     def cold_blocks(self) -> int:
         """Device pages held only by the index (reclaimable on demand)."""

@@ -54,12 +54,17 @@ class RealSpanOutcome:
 def run_real_spans(model: str = "opt-30b", chips: int = 6, n_spans: int = 2,
                    requests_per_span: int = 6, seed: int = 0,
                    shard: bool = False, prefix_cache: bool = True,
-                   shared_prefix_len: int = 16
+                   shared_prefix_len: int = 16, telemetry=None
                    ) -> tuple[list[RealSpanOutcome], "object"]:
     """Drive ``n_spans`` orchestrator plans through a real ClusterRuntime.
 
     Returns the per-span outcomes and the runtime (whose ``results`` hold
     every finished request for parity / completeness checks).
+
+    ``telemetry`` (a ``serving.telemetry.Telemetry``) is threaded into the
+    runtime when given: lifecycle events, latency histograms and the
+    orchestrator decision audit accumulate there, and the caller can export
+    a Chrome trace of the run afterwards.
 
     ``shared_prefix_len`` > 0 turns the trace into the shared-prefix shape
     real traffic has (system prompts / few-shot templates): every request
@@ -92,7 +97,7 @@ def run_real_spans(model: str = "opt-30b", chips: int = 6, n_spans: int = 2,
     runtime = ClusterRuntime(cfg, params, orch, blocks_per_chip=16,
                              seqs_per_chip=1, block_size=8, drain_steps=2,
                              seed=seed, shard=shard,
-                             prefix_cache=prefix_cache)
+                             prefix_cache=prefix_cache, telemetry=telemetry)
     rng = np.random.RandomState(seed)
     # one fixed template per type, drawn from a separate stream so toggling
     # the mode doesn't perturb the per-request draws below

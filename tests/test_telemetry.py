@@ -1,0 +1,343 @@
+"""Serving telemetry: tracer, metrics, decision audit, Chrome-trace export.
+
+Covers the tentpole acceptance bar (ISSUE 8): a 2-span heterogeneous-switch
+run exports a *valid* Chrome trace-event JSON with one track per replica,
+per-request flow arrows across migrations, and switch-phase begin/end
+spans; the fake-clock engine test proves timestamps come from the
+injectable clock (deterministic TTFT); the frozen ``load_stats`` schema is
+pinned; and the chaos-marked completeness test asserts that under a seeded
+fault plan (replica crash + a switch that fails mid-migration) every
+submitted request's event stream still ends in exactly one terminal event
+and every migration pairs a source with a destination replica.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, get_smoke_config
+from repro.core.costmodel import CostModel
+from repro.core.orchestrator import Orchestrator, OrchestratorConfig
+from repro.core.types import (ClusterSpec, Deployment, H100_SPEC,
+                              ReplicaConfig, WorkloadType)
+from repro.models import init_params
+from repro.serving.cluster import ClusterRuntime
+from repro.serving.engine import LOAD_STATS_KEYS, ServingEngine
+from repro.serving.faults import FaultPlan
+from repro.serving.router import FlowRouter
+from repro.serving.telemetry import (ORCH_TID, TERMINAL_KINDS, DecisionAudit,
+                                     Histogram, Telemetry, Tracer,
+                                     export_chrome_trace,
+                                     validate_chrome_trace)
+
+ARCH = [WorkloadType(1275, 287), WorkloadType(139, 133),
+        WorkloadType(1181, 1824), WorkloadType(282, 1121)]
+
+
+def ws(rates):
+    return [a.with_rate(float(r)) for a, r in zip(ARCH, rates)]
+
+
+@pytest.fixture(scope="module")
+def cfg_params():
+    cfg = get_smoke_config("yi-9b")
+    params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    return cfg, params
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        self.t += 0.125            # deterministic, strictly increasing
+        return self.t
+
+
+# ---------------------------------------------------------------------------
+# Primitives: tracer ring buffer, disabled no-op, histogram quantiles.
+# ---------------------------------------------------------------------------
+
+
+def test_tracer_ring_bound_and_disabled_noop():
+    tr = Tracer(clock=FakeClock(), capacity=4)
+    for i in range(10):
+        tr.emit("submit", rid=i)
+    assert len(tr.events) == 4
+    assert tr.dropped == 6
+    assert [e.rid for e in tr.events] == [6, 7, 8, 9]   # oldest evicted
+
+    off = Telemetry(enabled=False)
+    off.emit("submit", rid=0)
+    off.metrics.count("x")
+    off.metrics.observe("h", 1.0)
+    off.audit.record_realized(None)      # must not even touch the report
+    assert not off.tracer.events and not off.metrics.counters
+    assert not off.metrics.histograms and not off.audit.records
+
+
+def test_histogram_log_bucket_percentiles():
+    h = Histogram()
+    vals = [0.001 * (i + 1) for i in range(1000)]      # 1ms .. 1s uniform
+    for v in vals:
+        h.record(v)
+    assert h.count == 1000
+    assert h.min == pytest.approx(0.001) and h.max == pytest.approx(1.0)
+    assert h.mean == pytest.approx(np.mean(vals))
+    # log-bucketed: ~5% relative resolution at base 1.1
+    for p in (50, 95, 99):
+        exact = float(np.percentile(vals, p))
+        assert h.percentile(p) == pytest.approx(exact, rel=0.11)
+    # clamped to observed range
+    assert h.percentile(0) >= h.min and h.percentile(100) <= h.max
+    h2 = Histogram()
+    h2.record(-1.0)                      # underflow bucket
+    assert h2.percentile(50) == 0.0
+
+
+def test_validator_rejects_malformed_traces():
+    ok = {"traceEvents": [
+        {"ph": "B", "name": "sw", "pid": 0, "tid": 1, "ts": 0},
+        {"ph": "E", "name": "sw", "pid": 0, "tid": 1, "ts": 5}]}
+    assert validate_chrome_trace(ok)["be_pairs"] == 1
+    bad_pairs = {"traceEvents": [
+        {"ph": "B", "name": "sw", "pid": 0, "tid": 1, "ts": 0}]}
+    with pytest.raises(ValueError, match="unclosed"):
+        validate_chrome_trace(bad_pairs)
+    bad_flow = {"traceEvents": [
+        {"ph": "s", "name": "m", "pid": 0, "tid": 1, "ts": 0, "id": "a"}]}
+    with pytest.raises(ValueError, match="unpaired"):
+        validate_chrome_trace(bad_flow)
+    bad_dur = {"traceEvents": [
+        {"ph": "X", "name": "r", "pid": 0, "tid": 1, "ts": 0, "dur": -1}]}
+    with pytest.raises(ValueError, match="dur"):
+        validate_chrome_trace(bad_dur)
+
+
+# ---------------------------------------------------------------------------
+# Decision audit: FIFO join, calibration error, replica-count mismatch.
+# ---------------------------------------------------------------------------
+
+
+class _Plan:
+    def __init__(self, rcs, fractions, throughput=10.0):
+        self.deployment = Deployment(tuple(rcs))
+        self.fractions = fractions
+        self.throughput = throughput
+        self.kv_migration_seconds = 0.0
+
+
+class _Report:
+    def __init__(self, tokens, completed=0):
+        self.tokens = tokens
+        self.completed = completed
+
+
+def test_audit_fifo_join_and_calibration():
+    audit = DecisionAudit()
+    # two replicas, all traffic to replica 0 for type 0, etc.
+    plan = _Plan([ReplicaConfig(1, 1)] * 2, [[1.0, 0.0], [0.0, 1.0]])
+    w = [WorkloadType(10, 10, rate=3.0), WorkloadType(10, 10, rate=1.0)]
+    audit.record_plan(plan, w, hysteresis_margin=0.1, switched=True)
+    assert audit.records[0].predicted_share == pytest.approx([0.75, 0.25])
+    assert not audit.records[0].joined
+    # realized exactly the predicted split -> zero error
+    audit.record_realized(_Report([75, 25], completed=4))
+    assert audit.records[0].joined
+    assert audit.calibration_error() == pytest.approx(0.0)
+    # second decision realized fully inverted -> L1 = 1.0, mean 0.5
+    audit.record_plan(plan, w)
+    audit.record_realized(_Report([25, 75]))
+    assert audit.calibration_error() == pytest.approx(0.5)
+    # replica-count mismatch (death mid-span) scores the 2.0 sentinel
+    audit.record_plan(plan, w)
+    audit.record_realized(_Report([100]))
+    assert audit.records[2].share_l1 == 2.0
+
+
+# ---------------------------------------------------------------------------
+# Frozen load_stats schema (engine + cluster adds "dead").
+# ---------------------------------------------------------------------------
+
+
+def test_load_stats_schema_frozen(cfg_params):
+    cfg, params = cfg_params
+    eng = ServingEngine(cfg, params, num_blocks=32, block_size=8, max_seqs=2)
+    assert set(eng.load_stats()) == set(LOAD_STATS_KEYS), \
+        "engine load_stats keys drifted from the frozen schema"
+    rt = ClusterRuntime(cfg, params, total_chips=2, blocks_per_chip=16,
+                        seqs_per_chip=2, block_size=8,
+                        router=FlowRouter([[1.0]]))
+    rt.apply_plan(_Plan([ReplicaConfig(1, 1)], [[1.0]]))
+    (d,) = rt.load_stats()
+    assert set(d) == set(LOAD_STATS_KEYS) | {"dead"}, \
+        "cluster load_stats keys drifted from the frozen schema"
+
+
+# ---------------------------------------------------------------------------
+# Engine lifecycle with an injected clock: deterministic trace + TTFT.
+# ---------------------------------------------------------------------------
+
+
+def test_engine_trace_deterministic_with_fake_clock(cfg_params):
+    cfg, params = cfg_params
+
+    def run():
+        tm = Telemetry(clock=FakeClock())
+        eng = ServingEngine(cfg, params, num_blocks=64, block_size=8,
+                            max_seqs=2, telemetry=tm)
+        assert eng.clock is tm.clock     # unified timekeeping
+        rng = np.random.RandomState(3)
+        for i in range(2):
+            eng.submit(i, rng.randint(0, cfg.vocab_size, 8)
+                       .astype(np.int32), 4)
+        eng.run_to_completion()
+        return tm
+
+    a, b = run(), run()
+    assert [(e.kind, e.ts, e.rid) for e in a.tracer.events] == \
+           [(e.kind, e.ts, e.rid) for e in b.tracer.events]
+    kinds = {e.kind for e in a.tracer.events}
+    assert {"submit", "admit", "first_token", "dispatch", "sync",
+            "retire"} <= kinds
+    # TTFT is measured on the fake clock, hence identical across runs
+    ttft = a.metrics.histograms["ttft_s"].summary()
+    assert ttft["count"] == 2
+    assert ttft == b.metrics.histograms["ttft_s"].summary()
+    # each request: one submit, one first_token, one terminal
+    for rid, evs in a.tracer.by_request().items():
+        ks = [e.kind for e in evs]
+        assert ks.count("submit") == 1 and ks.count("first_token") == 1
+        assert sum(1 for k in ks if k in TERMINAL_KINDS) == 1
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: 2-span orchestrated heterogeneous switch -> valid Chrome
+# trace with per-replica tracks, migration flows, and switch-phase spans.
+# ---------------------------------------------------------------------------
+
+
+def test_orchestrated_switch_exports_valid_trace(cfg_params, tmp_path):
+    cfg, params = cfg_params
+    cm = CostModel(get_config("opt-30b").profile(), hw=H100_SPEC)
+    orch = Orchestrator(cm, ClusterSpec(6, hw=H100_SPEC),
+                        OrchestratorConfig(search_patience=10))
+    tm = Telemetry()
+    rt = ClusterRuntime(cfg, params, orch, blocks_per_chip=16,
+                        seqs_per_chip=1, block_size=8, drain_steps=0,
+                        telemetry=tm)
+    rng = np.random.RandomState(0)
+    rid = 0
+    for rates in ([5, 300, 2, 3], [40, 10, 60, 40]):
+        plan = orch.plan_span(ws(rates))
+        rt.apply_plan(plan)
+        for _ in range(6):
+            t = int(rng.randint(0, 4))
+            prompt = rng.randint(0, cfg.vocab_size,
+                                 6 + 2 * t).astype(np.int32)
+            rt.submit(rid, prompt, 8 + t, type_id=t)
+            rid += 1
+        for _ in range(4):
+            rt.step()
+        rt.finish_span()
+    rt.run_until_idle()
+    assert len(rt.results) == rid
+
+    kinds = {e.kind for e in tm.tracer.events}
+    assert "migrate" in kinds, "the heterogeneous switch migrated nothing"
+    assert "switch_prepare" in kinds and "switch_commit" in kinds
+
+    # the export round-trips through JSON and validates
+    out = tmp_path / "trace.json"
+    export_chrome_trace(tm, path=str(out))
+    obj = json.loads(out.read_text())
+    counts = validate_chrome_trace(obj)
+    tids = {e["tid"] for e in obj["traceEvents"] if e["ph"] != "M"}
+    assert len(tids - {ORCH_TID}) >= 2, "need one track per replica"
+    assert ORCH_TID in tids
+    assert counts["flows"] >= 1, "migrations must draw flow arrows"
+    assert counts["be_pairs"] >= 2, "switch phases must pair begin/end"
+    assert counts["slices"] >= rid, "every request needs residency slices"
+    # every track carries a thread_name metadata record
+    named = {e["tid"] for e in obj["traceEvents"] if e["ph"] == "M"}
+    assert tids <= named
+
+    # decision audit joined both spans
+    assert sum(1 for r in tm.audit.records if r.joined) == 2
+    assert np.isfinite(tm.audit.calibration_error())
+
+    # latency histograms populated: exactly one TTFT/TPOT per request
+    # (migrated re-prefills must not re-enter), >= one queue delay (a
+    # re-prefill migration re-admits and is counted again)
+    assert tm.metrics.histograms["ttft_s"].count == rid
+    assert tm.metrics.histograms["tpot_s"].count == rid
+    assert tm.metrics.histograms["queue_delay_s"].count >= rid
+
+
+# ---------------------------------------------------------------------------
+# Chaos: trace completeness under a seeded crash + mid-switch failure.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.chaos
+@pytest.mark.parametrize("case,kw", [
+    ("crash", dict(crashes=1, stalls=0)),
+    ("failed-switch", dict(crashes=0, stalls=0,
+                           switch_failure="switch_migrate")),
+    ("crash+failed-switch", dict(crashes=1, stalls=0,
+                                 switch_failure="switch_migrate")),
+])
+def test_trace_complete_under_chaos(cfg_params, case, kw):
+    cfg, params = cfg_params
+    faults = FaultPlan.seeded(11, n_replicas=2, horizon_ticks=6, **kw)
+    tm = Telemetry()
+    rt = ClusterRuntime(cfg, params, total_chips=4, blocks_per_chip=32,
+                        seqs_per_chip=4, block_size=8, drain_steps=1,
+                        router=FlowRouter([[0.5], [0.5]]), faults=faults,
+                        telemetry=tm)
+    rt.apply_plan(_Plan([ReplicaConfig(1, 1), ReplicaConfig(1, 1)],
+                        [[0.5], [0.5]]))
+    rng = np.random.RandomState(7)
+    for rid in range(8):
+        prompt = rng.randint(0, cfg.vocab_size,
+                             6 + (rid % 3) * 2).astype(np.int32)
+        rt.submit(rid, prompt, 6 + (rid % 4))
+    for _ in range(6):
+        rt.step()
+    # switch ordinal 2: the target of the switch_migrate fault
+    rt.apply_plan(_Plan([ReplicaConfig(2, 1), ReplicaConfig(1, 1)],
+                        [[0.6], [0.4]]))
+    rt.run_until_idle()
+    rt.finish_span()
+
+    # exactly one terminal event per submitted request, no extras
+    submitted = {e.rid for e in tm.tracer.events if e.kind == "submit"}
+    assert submitted == set(range(8))
+    terminals: dict[int, int] = {}
+    for e in tm.tracer.events:
+        if e.kind in TERMINAL_KINDS:
+            terminals[e.rid] = terminals.get(e.rid, 0) + 1
+    assert terminals.keys() == submitted, \
+        f"{case}: requests without a terminal event"
+    assert all(c == 1 for c in terminals.values()), \
+        f"{case}: duplicated terminal events {terminals}"
+
+    # every migration names a real source and destination replica
+    n_rep = len(rt.replicas)
+    for e in tm.tracer.events:
+        if e.kind == "migrate":
+            assert 0 <= e.data["src"] < n_rep
+            assert 0 <= e.data["dst"] < n_rep
+            assert e.data["path"] in ("handoff", "copy", "reprefill",
+                                      "requeue")
+
+    # crash events balance recovery events, and the export stays valid
+    n_crash = sum(1 for e in tm.tracer.events if e.kind == "crash")
+    n_recov = sum(1 for e in tm.tracer.events if e.kind == "recovered")
+    assert n_crash == n_recov
+    if kw.get("crashes"):
+        assert n_crash >= 1
+    counts = validate_chrome_trace(export_chrome_trace(tm))
+    assert counts["events"] > 0
