@@ -3,7 +3,8 @@
 CI used to fail benchmarks only when they raised; this script turns the
 numbers themselves into a gate.  The workflow stashes the committed
 ``BENCH_engine.json`` / ``BENCH_switch.json`` / ``BENCH_recovery.json`` /
-``BENCH_prefix.json`` before the bench steps overwrite them, then runs::
+``BENCH_prefix.json`` / ``BENCH_rebalance.json`` before the bench steps
+overwrite them, then runs::
 
     python benchmarks/check_regression.py \
         --baseline-dir .bench-baseline --fresh-dir .
@@ -38,6 +39,7 @@ ENGINE_JSON = "BENCH_engine.json"
 SWITCH_JSON = "BENCH_switch.json"
 RECOVERY_JSON = "BENCH_recovery.json"
 PREFIX_JSON = "BENCH_prefix.json"
+REBALANCE_JSON = "BENCH_rebalance.json"
 
 # machine-independent ratio floors (hard gates)
 PAGED_VS_DENSE_MIN = 10.0       # committed: ~80-250x on CPU smoke
@@ -234,6 +236,51 @@ def check_prefix(base: dict, fresh: dict, tol: float,
     return bad
 
 
+def check_rebalance(base: dict, fresh: dict) -> list[str]:
+    """The rebalance bench runs on a virtual clock, so every number in it
+    is deterministic and machine-independent: counts must match the
+    committed baseline exactly, and the on-vs-off ordering gates hold
+    within the fresh run alone."""
+    bad: list[str] = []
+    b_rows = _index(base["results"], "mode")
+    f_rows = _index(fresh["results"], "mode")
+    for key, br in sorted(b_rows.items()):
+        fr = f_rows.get(key)
+        if fr is None:
+            bad.append(f"rebalance {key[0]}: mode missing from fresh run")
+            continue
+        print(f"rebalance/{key[0]}: shed {fr['total_shed']} "
+              f"(baseline {br['total_shed']}), "
+              f"ttft_p95 {fr['ttft_p95_ticks']:.2f} ticks "
+              f"(baseline {br['ttft_p95_ticks']:.2f})")
+        for field in ("total_shed", "completed", "rebalanced", "preempted",
+                      "handoff", "requeued", "recompute_tokens"):
+            if fr.get(field) != br.get(field):
+                bad.append(f"rebalance {key[0]}: {field} = {fr.get(field)} "
+                           f"(baseline {br.get(field)}) — virtual-time "
+                           f"trace is deterministic, policy changed")
+        for field in ("ttft_p95_ticks", "tpot_p95_ticks"):
+            fv, bv = fr.get(field, 0.0), br.get(field, 0.0)
+            if abs(fv - bv) > 0.05 * max(abs(bv), 1e-9):
+                bad.append(f"rebalance {key[0]}: {field} = {fv:.3f} "
+                           f"(baseline {bv:.3f})")
+    off, on = f_rows.get(("off",)), f_rows.get(("on",))
+    if off and on:
+        print(f"rebalance/gain: shed {off['total_shed']} -> "
+              f"{on['total_shed']}")
+        if not on["total_shed"] < off["total_shed"]:
+            bad.append(f"rebalance: on shed {on['total_shed']} >= off "
+                       f"{off['total_shed']} — the rebalancer stopped "
+                       f"paying for itself")
+        if on["ttft_p95_ticks"] > off["ttft_p95_ticks"]:
+            bad.append(f"rebalance: on TTFT p95 "
+                       f"{on['ttft_p95_ticks']:.2f} > off "
+                       f"{off['ttft_p95_ticks']:.2f} ticks")
+        if on["handoff"] < 1:
+            bad.append("rebalance: no drain rode the handoff path")
+    return bad
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline-dir", required=True, type=pathlib.Path,
@@ -260,6 +307,8 @@ def main(argv=None) -> int:
     bad += check_prefix(_load(args.baseline_dir, PREFIX_JSON),
                         _load(args.fresh_dir, PREFIX_JSON),
                         args.tolerance, args.stall_tolerance)
+    bad += check_rebalance(_load(args.baseline_dir, REBALANCE_JSON),
+                           _load(args.fresh_dir, REBALANCE_JSON))
     if bad:
         print("\nBENCH REGRESSIONS:", file=sys.stderr)
         for b in bad:

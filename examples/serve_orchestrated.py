@@ -89,7 +89,7 @@ def run_real(args) -> None:
     outcomes, runtime = run_real_spans(
         model=args.model, chips=args.chips, n_spans=args.spans,
         requests_per_span=args.requests_per_span, seed=args.seed,
-        shard=args.shard, telemetry=telemetry)
+        shard=args.shard, telemetry=telemetry, rebalance=args.rebalance)
     mode = "sharded engines" if args.shard else "real engines"
     print(f"{runtime.cfg.name} ({mode}) planning as {args.model} on "
           f"{args.chips} chips")
@@ -111,6 +111,12 @@ def run_real(args) -> None:
               f"completed {report.completed}/{o.n_requests} | "
               f"health {np.round(report.achieved_fraction, 2)} | "
               f"observed-rate EWMA {np.round(o.observed_rates, 1)}")
+        if args.rebalance:
+            rb = report.rebalance
+            print(f"  rebalance: moved {report.rebalanced} "
+                  f"(handoff {rb.handoff}, copied {rb.copied}, "
+                  f"re-prefilled {rb.reprefilled}, requeued {rb.requeued}) | "
+                  f"preempted {report.preempted}")
         if report.prefix_hit_rate is not None:
             rate = np.round(np.nan_to_num(report.prefix_hit_rate), 2)
             print(f"  prefix cache: hits {report.prefix_hits} / "
@@ -161,6 +167,10 @@ def main(argv=None):
                          "per-replica device sub-mesh (needs >= --chips jax "
                          "devices, e.g. XLA_FLAGS="
                          "--xla_force_host_platform_device_count=8)")
+    ap.add_argument("--rebalance", action="store_true",
+                    help="with --real: enable the live rebalancer (watchdog "
+                         "straggler drains, hot-spot relief, priority "
+                         "preemption) and print per-span move counters")
     ap.add_argument("--requests-per-span", type=int, default=6)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--trace", metavar="OUT.json", default=None,

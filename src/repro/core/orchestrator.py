@@ -55,6 +55,11 @@ class OrchestratorConfig:
     search_patience: int = 20
     switch_hysteresis: float = 1.05   # require 5% predicted gain to switch
     ewma_alpha: float = 0.3
+    # how strongly mid-span rebalance churn raises the switch bar: each
+    # EWMA'd rebalance/preempt move adds this much to the hysteresis margin
+    # (capped at +0.25), so a cluster the rebalancer is actively reshaping
+    # demands a bigger predicted win before the planner reshapes it again
+    rebalance_churn_gain: float = 0.02
 
 
 @dataclasses.dataclass
@@ -83,6 +88,7 @@ class Orchestrator:
         self.prefix_hit_rate: np.ndarray | None = None  # per-type EWMA [0, 1]
         self.inflight_lens: list[int] = []      # contexts a switch migrates
         self.inflight_shared_pool: bool = True  # page handoff available?
+        self.rebalance_churn = 0.0              # EWMA of moves per span
         # decision audit sink (serving.telemetry.DecisionAudit): when set
         # (by ClusterRuntime wiring a Telemetry bundle), every plan_span
         # decision records its inputs + predicted share for later joining
@@ -130,6 +136,18 @@ class Orchestrator:
         blended = ((1 - a) * self.prefix_hit_rate
                    + a * np.clip(np.nan_to_num(obs), 0.0, 1.0))
         self.prefix_hit_rate = np.where(seen, blended, self.prefix_hit_rate)
+
+    def observe_rebalance(self, moves: int) -> None:
+        """Mid-span rebalancer activity for the last span (EWMA).
+
+        ``moves``: sequences the cluster rebalancer migrated or preempted
+        during the span.  High churn means the *intra*-span mechanism is
+        already reshaping load — the planner then raises its switch
+        hysteresis bar (see ``plan_span``) so the two control loops do not
+        fight over the same imbalance."""
+        a = self.cfg.ewma_alpha
+        self.rebalance_churn = ((1 - a) * self.rebalance_churn
+                                + a * float(moves))
 
     def observe_inflight(self, context_lens: list[int],
                          shared_pool: bool = True) -> None:
@@ -210,7 +228,10 @@ class Orchestrator:
                                        balance=False).throughput
             cur_cap = assign_workloads(self.cm, self.current, stressed,
                                        balance=False).throughput
-            h = self.cfg.switch_hysteresis + kv_s / self.cfg.span_seconds
+            h = (self.cfg.switch_hysteresis
+                 + kv_s / self.cfg.span_seconds
+                 + min(0.25, self.cfg.rebalance_churn_gain
+                       * self.rebalance_churn))
             margin = h
             thr_gain = result.throughput > h * cur_res.throughput
             cap_gain = (result.throughput >= 0.999 * cur_res.throughput

@@ -87,6 +87,53 @@ hold (context ceiling / no live replica) are released and recorded in
 chips leave the planning budget via ``Orchestrator.observe_failures`` so
 the next ``plan_span`` re-solves over survivors.
 
+Rebalancing and preemption policy
+---------------------------------
+With ``rebalance=`` set (a ``RebalanceConfig``, or ``True`` for defaults)
+the same migration ladder becomes a *continuously available* scheduling
+action instead of a switch/crash-only mechanism (Llumnix-style live
+rescheduling).  Every tick, under a per-tick move budget
+(``max_moves_per_tick``), the runtime may:
+
+  * **Straggler escape** — a step-loop watchdog counts consecutive ticks
+    a replica had work but made no progress (a chaos ``stall``/``slow``,
+    a real frozen device).  At ``watchdog_ticks`` the replica is marked
+    *degraded*: admission pauses, routing masks it out, and its requests
+    drain onto survivors through the cheapest migration path — this runs
+    in the async dispatch→sync *overlap window*, which is safe precisely
+    because a zero-progress replica has no in-flight dispatch to race
+    with.  Only after ``escalate_ticks`` of sustained degradation (the
+    drain has had its chance) does the watchdog escalate to
+    ``fail_replica`` — a hang becomes graceful degradation, not a
+    ``ClusterHangError``.  A degraded replica that dispatches again
+    (e.g. the stall window ended) is immediately un-degraded and resumes
+    admitting.
+  * **Hot-spot relief** — replicas whose queue depth reaches
+    ``hot_queue`` or whose free-page fraction falls below
+    ``hot_kv_frac`` shed load: queued never-prefilled requests move
+    first (a free requeue), then the cheapest resident sequence
+    (smallest context) rides a page handoff to the least-loaded live
+    replica at or below ``cold_load``.
+  * **Priority preemption** — when a high-priority request is queued on
+    a replica that cannot admit it, the cost ladder is *relocation >
+    eviction > shedding*: the cheapest lower-priority resident victim is
+    first migrated to a survivor (zero recompute); failing that it is
+    evicted — exported to the host request log, pages freed, resumed
+    later by re-prefill on whichever replica has genuine room (zero
+    emitted tokens lost); only when neither is possible does anything
+    shed.  ``Request.priority`` plumbs through ``submit`` on engine and
+    cluster; admission itself is priority-ordered inside the engine.
+
+The two control loops are kept from fighting: every span,
+``finish_span`` reports the rebalancer's move count to
+``Orchestrator.observe_rebalance``, whose churn EWMA *raises* the
+switch-hysteresis bar (exactly as a pending KV-migration stall does) —
+a cluster the rebalancer is actively reshaping demands a bigger
+predicted win before the planner reshapes it again.  The standing bar
+holds on every rebalance path: greedy token parity with an unperturbed
+run, zero emitted tokens lost, and zero recompute on handoff-path
+moves (``total_prefill_tokens`` is asserted against in tests).
+
 Switch transaction
 ------------------
 ``apply_plan`` is transactional (prepare → commit, with rollback).
@@ -172,6 +219,21 @@ class ClusterHangError(RuntimeError):
 
 
 @dataclasses.dataclass
+class RebalanceConfig:
+    """Knobs for the live rebalancer (see the module docstring's policy
+    section).  Pass ``rebalance=True`` to ``ClusterRuntime`` for these
+    defaults; ``None`` (the default) disables mid-span rebalancing
+    entirely and preserves the pre-rebalancer behavior."""
+    max_moves_per_tick: int = 2   # migration budget per cluster tick
+    watchdog_ticks: int = 3       # zero-progress ticks before "degraded"
+    escalate_ticks: int = 8       # degraded ticks before fail_replica
+    hot_queue: int = 1            # queue depth that flags a hot spot
+    hot_kv_frac: float = 0.125    # free-page fraction below which = hot
+    cold_load: float = 0.75       # max load of a migration destination
+    preempt: bool = True          # enable the priority-preemption ladder
+
+
+@dataclasses.dataclass
 class ReplicaHandle:
     """One live replica: its plan config, engine, and span counters."""
     index: int
@@ -190,6 +252,11 @@ class ReplicaHandle:
     dead: bool = False
     failures: int = 0           # consecutive dispatch failures (retry budget)
     backoff_until: int = 0      # cluster tick the next retry may happen at
+    # watchdog state (rebalancer only): consecutive had-work-no-dispatch
+    # ticks, and whether/when the replica was marked degraded
+    no_progress: int = 0
+    degraded: bool = False
+    degraded_tick: int = 0
 
 
 @dataclasses.dataclass
@@ -237,6 +304,11 @@ class SpanReport:
     prefix_misses: int = 0           # admissions with no cached prefix
     prefix_evicted_bytes: int = 0    # device -> host tier, this span
     prefix_restored_bytes: int = 0   # host tier -> device, this span
+    # live-rebalancer accounting for the span (zeros when disabled)
+    rebalanced: int = 0              # sequences moved mid-span (all paths)
+    preempted: int = 0               # lower-priority victims preempted
+    rebalance: MigrationReport = dataclasses.field(
+        default_factory=MigrationReport)   # path split of the moves
 
 
 @dataclasses.dataclass
@@ -251,6 +323,7 @@ class _RequestLog:
     emitted: list
     ttft_deadline: float | None = None
     tpot_deadline: float | None = None
+    priority: int = 0
 
 
 class ClusterRuntime:
@@ -265,7 +338,8 @@ class ClusterRuntime:
                  prefix_cache: bool = False,
                  shard: bool = False, devices=None,
                  faults: FaultPlan | None = None, max_retries: int = 3,
-                 telemetry=None):
+                 telemetry=None,
+                 rebalance: "RebalanceConfig | bool | None" = None):
         """Args:
           cfg/params: the (one) model every replica serves — heterogeneity
             is in per-replica capacity, not weights.
@@ -307,6 +381,11 @@ class ClusterRuntime:
           telemetry: optional ``serving.telemetry.Telemetry`` bundle — see
             the module docstring's telemetry section.  The default is the
             disabled ``NULL_TELEMETRY`` (every emit point is a no-op).
+          rebalance: enable the live rebalancer (``RebalanceConfig`` or
+            ``True`` for defaults) — mid-span straggler drains, hot-spot
+            relief, and priority preemption under a per-tick migration
+            budget; see the module docstring's policy section.  ``None``
+            (default) keeps migration a switch/crash-only mechanism.
         """
         if total_chips is None:
             if orch is None:
@@ -387,6 +466,17 @@ class ClusterRuntime:
         self._switching = False               # mask injection inside switches
         # last successfully applied plan, for rollback restore
         self._applied_fractions: list | None = None
+        # live rebalancer (None = disabled, the pre-rebalancer behavior)
+        if rebalance is True:
+            rebalance = RebalanceConfig()
+        self.rebalance: RebalanceConfig | None = rebalance or None
+        self._moves_left = 0                  # per-tick migration budget
+        # preemption-evicted requests parked in the host log:
+        # rid -> the replica index they were evicted from
+        self._evicted: dict[int, int] = {}
+        self._span_rebalanced = 0
+        self._span_preempted = 0
+        self._span_rebalance = MigrationReport()
 
     # -- replica materialization ----------------------------------------------
 
@@ -750,8 +840,11 @@ class ClusterRuntime:
         return report
 
     def _emit_migrations(self, rep: MigrationReport, dst: int,
-                         src_idx: dict[int, int]) -> None:
-        """Telemetry: one ``migrate`` event per restored request.
+                         src_idx: dict[int, int],
+                         kind: str = "migrate") -> None:
+        """Telemetry: one ``migrate``/``rebalance`` event per restored
+        request (``kind`` distinguishes switch/crash migrations from
+        mid-span rebalancer moves; both render as flow arrows).
 
         ``src_idx`` maps rid -> source replica index; requests without an
         entry (e.g. a rollback return trip of a request that never left)
@@ -761,9 +854,9 @@ class ClusterRuntime:
         if not tm.enabled:
             return
         for rid, (path, pages) in rep.paths.items():
-            tm.emit("migrate", rid=rid, src=src_idx.get(rid, dst),
+            tm.emit(kind, rid=rid, src=src_idx.get(rid, dst),
                     dst=dst, path=path, pages=pages)
-            tm.metrics.count(f"migrate_{path}")
+            tm.metrics.count(f"{kind}_{path}")
 
     def _revert_orchestrator(self) -> None:
         """Point the orchestrator's deployment state back at what the
@@ -784,13 +877,20 @@ class ClusterRuntime:
                        for h in self.replicas])
         if not up.any():
             return -1
+        if self.faults is not None:
+            # injected traffic skew: all submissions pile onto one replica
+            # while it is up (the hot spot the rebalancer must relieve)
+            b = self.faults.route_bias(self._tick)
+            if b is not None and b < len(up) and up[b]:
+                return b
         self.router.update_loads(
             [h.engine.load_stats()["load"] for h in self.replicas])
         return self.router.route(type_id, up)
 
     def submit(self, rid: int, prompt: np.ndarray, max_new_tokens: int,
                type_id: int = 0, ttft_deadline: float | None = None,
-               tpot_deadline: float | None = None) -> int:
+               tpot_deadline: float | None = None,
+               priority: int = 0) -> int:
         """Route one typed request to a replica; returns the replica index.
 
         ``ttft_deadline`` (absolute, engine clock) arms SLO-aware shedding:
@@ -798,7 +898,10 @@ class ClusterRuntime:
         before its prefill starts.  ``tpot_deadline`` (seconds per output
         token) arms the decode-side counterpart: a request whose average
         token pace blows the budget is shed mid-flight.  Both are counted
-        in ``load_stats`` / ``finish_span``."""
+        in ``load_stats`` / ``finish_span``.  ``priority`` (higher = more
+        important) orders admission on the destination engine and — with
+        the rebalancer enabled — lets a queued high-priority request
+        preempt lower-priority residents instead of shedding."""
         if not self.replicas:
             raise RuntimeError("no deployment applied yet (call apply_plan)")
         k = self._route(type_id, len(prompt), max_new_tokens)
@@ -809,7 +912,7 @@ class ClusterRuntime:
         self.replicas[k].engine.submit(rid, prompt, max_new_tokens,
                                        ttft_deadline=ttft_deadline,
                                        tpot_deadline=tpot_deadline,
-                                       type_id=type_id)
+                                       type_id=type_id, priority=priority)
         # book-keep only after the engine accepted the request, so rejected
         # submissions don't pollute the observed-rate feedback
         self.rid_type[rid] = type_id
@@ -818,7 +921,8 @@ class ClusterRuntime:
         self.rid_owner[rid] = k
         self.request_log[rid] = _RequestLog(
             np.asarray(prompt, np.int32), max_new_tokens, [],
-            ttft_deadline=ttft_deadline, tpot_deadline=tpot_deadline)
+            ttft_deadline=ttft_deadline, tpot_deadline=tpot_deadline,
+            priority=priority)
         return k
 
     def _record_finish(self, r: EngineRequest,
@@ -848,7 +952,8 @@ class ClusterRuntime:
         return InflightSnapshot(rid, lg.prompt, list(lg.emitted),
                                 lg.max_new_tokens,
                                 deadline=lg.ttft_deadline,
-                                tpot=lg.tpot_deadline)
+                                tpot=lg.tpot_deadline,
+                                priority=lg.priority)
 
     def step(self) -> list[EngineRequest]:
         """One cluster tick: step every replica that has work (round-robin).
@@ -874,13 +979,17 @@ class ClusterRuntime:
         self._tick += 1
         finished: list[EngineRequest] = []
         pending = []
+        dispatched: set[int] = set()
+        had_work: dict[int, bool] = {}
         for h in self.replicas:
             if h.dead:
                 continue
             eng = h.engine
             busy = len(eng.active)
             h.slot_ticks += busy          # expected: ~1 token / slot / tick
-            if not (eng.active or (eng.waiting and eng.admitting)):
+            work = bool(eng.active or (eng.waiting and eng.admitting))
+            had_work[h.index] = work
+            if not work:
                 continue
             if h.period > 1 and self._tick % h.period:
                 continue                  # injected straggler skips this tick
@@ -888,7 +997,10 @@ class ClusterRuntime:
                     and self.faults.stalled(self._tick, h.index)):
                 continue                  # injected stall: frozen, no error
             if self._tick < h.backoff_until:
-                continue                  # backing off after a failure
+                # backing off after a failure: intentional non-progress, so
+                # the watchdog must not count it
+                had_work[h.index] = False
+                continue
             try:
                 if self.faults is not None:
                     spec = self.faults.dispatch_fault(self._tick, h.index)
@@ -902,7 +1014,16 @@ class ClusterRuntime:
                 self._transient(h, e)
                 continue
             h.failures = 0
+            dispatched.add(h.index)
             pending.append((h, eng.tokens_out, pend))
+        if self.rebalance is not None:
+            # the async overlap window: every dispatch is in flight, no
+            # sync has read anything back.  Draining a zero-progress
+            # replica here is safe — it has no pending dispatch to race
+            # with, and imports land in destination slots outside any
+            # pending decode's captured batch.
+            self._moves_left = self.rebalance.max_moves_per_tick
+            self._watchdog(dispatched, had_work)
         for h, t0, pend in pending:
             try:
                 done = h.engine.finish_step(pend)
@@ -914,6 +1035,8 @@ class ClusterRuntime:
                 finished.append(r)
             h.emitted_span += h.engine.tokens_out - t0
             self._sync_log(h.engine)
+        if self.rebalance is not None:
+            self._rebalance_post()
         self._drain_prefix_events()
         return finished
 
@@ -944,8 +1067,9 @@ class ClusterRuntime:
 
     @property
     def pending(self) -> int:
-        return sum(len(h.engine.waiting) + len(h.engine.active)
-                   for h in self.replicas)
+        return (sum(len(h.engine.waiting) + len(h.engine.active)
+                    for h in self.replicas)
+                + len(self._evicted))
 
     def run_until_idle(self, max_ticks: int = 10_000,
                        strict: bool = True) -> list[EngineRequest]:
@@ -968,6 +1092,283 @@ class ClusterRuntime:
                 f"{self.pending} requests still pending; per-replica "
                 f"(index, waiting, active, state): {stats}")
         return finished
+
+    # -- live rebalancing (mid-span migration / preemption) ----------------------
+
+    def _watchdog(self, dispatched: set, had_work: dict) -> None:
+        """Straggler escape, run inside the dispatch→sync overlap window.
+
+        Counts consecutive ticks a replica had work but fired no dispatch
+        (an injected ``stall``/``slow``, a real frozen device — backoff
+        skips are intentional and excluded).  At ``watchdog_ticks`` the
+        replica degrades: admission pauses and its requests drain onto
+        survivors under the move budget; a later successful dispatch
+        un-degrades it.  After ``escalate_ticks`` of sustained
+        degradation the replica is failed for real — the export is safe
+        (``trust_pages=True``) because nothing was dispatched during the
+        freeze, so host and device state agree."""
+        rb = self.rebalance
+        tm = self.telemetry
+        for h in list(self.replicas):
+            if h.dead:
+                continue
+            if h.index in dispatched:
+                h.no_progress = 0
+                if h.degraded:
+                    # progress again (e.g. the stall window ended): rejoin
+                    h.degraded = False
+                    h.engine.resume_admission()
+                continue
+            if h.degraded:
+                self._drain_degraded(h)
+                if self._tick - h.degraded_tick >= rb.escalate_ticks:
+                    self._fail(h, RuntimeError(
+                        f"watchdog: replica {h.index} made no progress "
+                        f"for {self._tick - h.degraded_tick} ticks after "
+                        f"degradation"), trust_pages=True)
+                continue
+            if not had_work.get(h.index):
+                continue
+            h.no_progress += 1
+            if h.no_progress < rb.watchdog_ticks:
+                continue
+            h.degraded = True
+            h.degraded_tick = self._tick
+            h.engine.pause_admission()
+            if tm.enabled:
+                tm.emit("degraded", replica=h.index, ticks=h.no_progress)
+                tm.metrics.count("replica_degraded")
+            self._drain_degraded(h)
+
+    def _drain_degraded(self, h: ReplicaHandle) -> None:
+        """Best-effort drain of a degraded replica under the move budget.
+
+        Queued requests first (they move for free — token state only),
+        then residents (page handoff).  Whatever does not fit a survivor
+        this tick is retried next tick, and the escalation path recovers
+        any leftovers."""
+        eng = h.engine
+        for r in list(eng.waiting):
+            if self._moves_left <= 0:
+                return
+            self._move_request(h, r)
+        for slot in sorted(eng.active):
+            if self._moves_left <= 0:
+                return
+            r = eng.active.get(slot)
+            if r is not None:
+                self._move_request(h, r)
+
+    def _pick_dst(self, src_h: ReplicaHandle, r: EngineRequest,
+                  max_load: float | None = None) -> ReplicaHandle | None:
+        """Least-loaded live survivor that can hold ``r`` *right now*:
+        free slot + page/quota capacity for page-resident sequences
+        (pre-checked so a handoff never degrades into a surprise
+        re-prefill), just the context-ceiling fit for queued ones."""
+        eng = src_h.engine
+        ctx = len(r.prompt) + len(r.generated)
+        remaining = r.max_new_tokens - len(r.generated)
+        if remaining < 1:
+            return None
+        total = ctx + remaining - 1
+        resident = not r.prefilling and r.slot in eng.cache.seq_blocks
+        n_blocks = n_shared = 0
+        if resident:
+            n_blocks = len(eng.cache.seq_blocks[r.slot])
+            n_shared = eng.cache.seq_shared.get(r.slot, 0)
+        best, best_load = None, None
+        for h in self.replicas:
+            if h is src_h or h.dead or h.degraded:
+                continue
+            e = h.engine
+            if not e.admitting or not e.fits(ctx, remaining):
+                continue
+            if resident:
+                if len(e.active) >= e.max_seqs:
+                    continue
+                if e.cache.pool is eng.cache.pool:
+                    if not e.cache.can_adopt(n_blocks, total,
+                                             n_shared=n_shared):
+                        continue
+                elif not e.cache.can_admit(ctx, total_tokens=total):
+                    continue
+            load = e.load_stats()["load"]
+            if max_load is not None and load > max_load:
+                continue
+            if best_load is None or load < best_load:
+                best, best_load = h, load
+        return best
+
+    def _move_request(self, src_h: ReplicaHandle, r: EngineRequest,
+                      max_load: float | None = None) -> bool:
+        """Migrate one request off ``src_h`` through the cheapest path;
+        returns True (and spends one budget unit) when it moved."""
+        dst = self._pick_dst(src_h, r, max_load=max_load)
+        if dst is None:
+            return False
+        snap = src_h.engine.export_request(r.rid, release=False)
+        if snap is None:
+            return False
+        self._log_tokens(snap.rid, snap.generated)
+        rep = migrate_batch(dst.engine, [snap])
+        self._emit_migrations(rep, dst.index, {snap.rid: src_h.index},
+                              kind="rebalance")
+        self._span_rebalance.merge(rep)
+        src_h.engine.rebalanced_out += 1
+        dst.engine.rebalanced_in += 1
+        self._span_rebalanced += 1
+        self.rid_owner[snap.rid] = dst.index
+        self._moves_left -= 1
+        return True
+
+    def _rebalance_post(self) -> None:
+        """Post-sync rebalancing, under whatever is left of the tick's
+        move budget: resume preemption-evicted requests, relieve hot
+        spots, then run the priority-preemption ladder."""
+        self._resume_evicted()
+        self._relieve_hotspots()
+        if self.rebalance.preempt:
+            for h in list(self.replicas):
+                if self._moves_left <= 0:
+                    return
+                if not h.dead and not h.degraded:
+                    self._preempt(h)
+
+    def _relieve_hotspots(self) -> None:
+        """Move load off replicas with deep queues or KV pressure, onto
+        survivors at or below ``cold_load``.  Queued never-prefilled
+        requests move first (free); else the smallest resident sequence
+        rides a page handoff."""
+        rb = self.rebalance
+        for h in list(self.replicas):
+            if self._moves_left <= 0:
+                return
+            if h.dead or h.degraded:
+                continue
+            eng = h.engine
+            cap = eng.cache.quota or eng.cache.num_blocks
+            hot = (len(eng.waiting) >= rb.hot_queue
+                   or eng.cache.n_free_blocks / max(cap, 1)
+                   < rb.hot_kv_frac)
+            if not hot:
+                continue
+            moved = False
+            for r in list(eng.waiting):
+                if not r.generated:        # free move: nothing computed yet
+                    moved = self._move_request(h, r, max_load=rb.cold_load)
+                    if moved:
+                        break
+            if moved:
+                continue
+            for r in sorted((r for r in eng.active.values()
+                             if not r.prefilling
+                             and r.max_new_tokens - len(r.generated) >= 1),
+                            key=lambda r: len(r.prompt) + len(r.generated)):
+                if self._move_request(h, r, max_load=rb.cold_load):
+                    break
+
+    def _preempt(self, h: ReplicaHandle) -> None:
+        """Relocation > eviction > shedding, for a queued high-priority
+        request its replica cannot admit.
+
+        The cheapest lower-priority resident victim is migrated to a
+        survivor if one can hold it; otherwise it is *evicted* — exported
+        to the host request log with its pages freed, parked in
+        ``_evicted``, and resumed later by re-prefill wherever genuine
+        room appears (zero emitted tokens lost).  Only if the ladder
+        cannot act does the waiter face ordinary SLO shedding."""
+        eng = h.engine
+        if not eng.waiting:
+            return
+        waiter = max(eng.waiting, key=lambda r: r.priority)
+        if waiter.priority <= 0:
+            return
+        ctx = len(waiter.prefill_tokens)
+        total = ctx + (waiter.max_new_tokens - len(waiter.generated)) - 1
+        if (len(eng.active) < eng.max_seqs
+                and eng.cache.can_admit(ctx, total_tokens=total)):
+            return                      # admission will take it anyway
+        victims = [r for r in eng.active.values()
+                   if not r.prefilling and r.priority < waiter.priority
+                   and r.max_new_tokens - len(r.generated) >= 1]
+        if not victims:
+            return
+        victim = min(victims, key=lambda r: (r.priority,
+                                             len(r.prompt)
+                                             + len(r.generated)))
+        rid = victim.rid
+        if self._move_request(h, victim):
+            action = "relocate"
+        else:
+            snap = eng.export_request(rid, release=True)
+            if snap is None:
+                return
+            self._log_tokens(snap.rid, snap.generated)
+            self._evicted[rid] = h.index
+            self._moves_left -= 1
+            action = "evict"
+        eng.preempted += 1
+        self._span_preempted += 1
+        if self.telemetry.enabled:
+            self.telemetry.emit("preempt", rid=rid, replica=h.index,
+                                action=action, for_rid=waiter.rid)
+            self.telemetry.metrics.count(f"preempt_{action}")
+
+    def _resume_evicted(self) -> None:
+        """Re-admit preemption-evicted requests from the host log onto
+        whichever replica has genuine room (free slot + pages), least
+        loaded first.  A request no survivor can ever fit is shed —
+        degrade, never wedge; one that just has to wait stays parked."""
+        if not self._evicted:
+            return
+        tm = self.telemetry
+        for rid, src in list(self._evicted.items()):
+            if self._moves_left <= 0:
+                return
+            lg = self.request_log[rid]
+            ctx = len(lg.prompt) + len(lg.emitted)
+            remaining = lg.max_new_tokens - len(lg.emitted)
+            if remaining < 1:        # the log already holds the output
+                del self._evicted[rid]
+                self._record_finish(EngineRequest(
+                    rid, lg.prompt, lg.max_new_tokens,
+                    generated=list(lg.emitted), done=True))
+                if tm.enabled:
+                    tm.emit("finish_log", rid=rid, tokens=len(lg.emitted))
+                continue
+            ever = [h for h in self.replicas if not h.dead
+                    and h.engine.fits(ctx, remaining)]
+            if not ever:
+                del self._evicted[rid]
+                self.shed_rids.append(rid)
+                if tm.enabled:
+                    tm.emit("shed", rid=rid, reason="capacity")
+                    tm.metrics.count("shed_capacity")
+                continue
+            best, best_load = None, None
+            total = ctx + remaining - 1
+            for h in ever:
+                e = h.engine
+                if h.degraded or not e.admitting:
+                    continue
+                if (len(e.active) >= e.max_seqs
+                        or not e.cache.can_admit(ctx, total_tokens=total)):
+                    continue
+                load = e.load_stats()["load"]
+                if best_load is None or load < best_load:
+                    best, best_load = h, load
+            if best is None:
+                continue             # no room yet: retry next tick
+            snap = self._snapshot_from_log(rid)
+            del self._evicted[rid]
+            rep = migrate_batch(best.engine, [snap])
+            self._emit_migrations(rep, best.index, {rid: src},
+                                  kind="rebalance")
+            self._span_rebalance.merge(rep)
+            best.engine.rebalanced_in += 1
+            self._span_rebalanced += 1
+            self.rid_owner[rid] = best.index
+            self._moves_left -= 1
 
     # -- failure detection & recovery -------------------------------------------
 
@@ -1082,6 +1483,9 @@ class ClusterRuntime:
         h.dead = False
         h.failures = 0
         h.backoff_until = 0
+        h.no_progress = 0
+        h.degraded = False
+        h.degraded_tick = 0
         h.slot_ticks = h.emitted_span = h.completed_span = 0
         h.shed_mark = 0
         self.lost_chips -= h.rc.chips
@@ -1217,7 +1621,10 @@ class ClusterRuntime:
                             prefix_hit_rate=hit_rate,
                             prefix_hits=d_hits, prefix_misses=d_miss,
                             prefix_evicted_bytes=d_evict,
-                            prefix_restored_bytes=d_restore)
+                            prefix_restored_bytes=d_restore,
+                            rebalanced=self._span_rebalanced,
+                            preempted=self._span_preempted,
+                            rebalance=self._span_rebalance)
         if self.telemetry.enabled:
             # join realized span numbers with the matching plan decision
             # (FIFO) so the audit can score prediction calibration
@@ -1236,6 +1643,11 @@ class ClusterRuntime:
             lens = [c for h in self.replicas if not h.dead
                     for c in h.engine.inflight_context_lens()]
             self.orch.observe_inflight(lens, shared_pool=not self.shard)
+            if self.rebalance is not None:
+                # churn feedback: mid-span moves raise the planner's
+                # switch-hysteresis bar so the two loops don't fight
+                self.orch.observe_rebalance(self._span_rebalanced
+                                            + self._span_preempted)
         for h in self.replicas:
             h.slot_ticks = 0
             h.emitted_span = 0
@@ -1248,4 +1660,7 @@ class ClusterRuntime:
         self._span_dead = []
         self._span_retries = 0
         self._span_recovery = MigrationReport()
+        self._span_rebalanced = 0
+        self._span_preempted = 0
+        self._span_rebalance = MigrationReport()
         return report

@@ -120,6 +120,13 @@ prefix_restored_bytes    KV bytes moved host tier -> device
 shed                     requests shed for SLO (TTFT queue + TPOT mid-flight)
 decode_syncs             fused-decode device->host syncs (one per horizon)
 load                     (waiting + active) / max_seqs
+rebalanced_in            sequences the cluster rebalancer moved ONTO this
+                         replica mid-span (adoption / requeue / re-prefill)
+rebalanced_out           sequences the rebalancer moved OFF this replica
+preempted                lower-priority sequences preempted here (relocated
+                         or evicted) to admit a higher-priority request
+fragmentation            internal waste of allocated KV pages: 1 - resident
+                         tokens / (held pages * block_size), in [0, 1]
 =======================  ====================================================
 """
 from __future__ import annotations
@@ -150,6 +157,7 @@ LOAD_STATS_KEYS = frozenset({
     "prefix_hits", "prefix_misses", "prefix_hit_tokens",
     "prefix_evicted_bytes", "prefix_restored_bytes", "shed",
     "decode_syncs", "load",
+    "rebalanced_in", "rebalanced_out", "preempted", "fragmentation",
 })
 
 
@@ -188,6 +196,9 @@ class EngineRequest:
     t_first: float | None = None
     # engine-clock submission time (telemetry: queue delay / TTFT)
     t_submit: float | None = None
+    # scheduling priority (higher = more important): orders admission and
+    # selects preemption victims in the cluster rebalancer
+    priority: int = 0
 
     @property
     def prefill_tokens(self) -> np.ndarray:
@@ -228,6 +239,7 @@ class InflightSnapshot:
     conv: jax.Array | None = None
     deadline: float | None = None    # TTFT deadline, carried across migration
     tpot: float | None = None        # TPOT pace budget, carried likewise
+    priority: int = 0                # scheduling priority, carried likewise
 
 
 @dataclasses.dataclass
@@ -360,6 +372,11 @@ class ServingEngine:
         # SLO shedding: rids rejected because their TTFT budget was already
         # blown while still waiting
         self.shed_rids: list[int] = []
+        # rebalancer traffic: sequences moved onto/off this replica mid-span
+        # and lower-priority sequences preempted here (cluster increments)
+        self.rebalanced_in = 0
+        self.rebalanced_out = 0
+        self.preempted = 0
         # one time source for deadlines, TPOT pacing, AND trace events:
         # ``clock`` wins, else the telemetry bundle's clock (time.monotonic
         # on the disabled default) — inject a fake via either for
@@ -505,7 +522,7 @@ class ServingEngine:
     def submit(self, rid: int, prompt: np.ndarray, max_new_tokens: int,
                ttft_deadline: float | None = None,
                tpot_deadline: float | None = None,
-               type_id: int = -1) -> None:
+               type_id: int = -1, priority: int = 0) -> None:
         """Queue a request.  ``ttft_deadline`` (engine-clock absolute time)
         arms SLO-aware shedding: if the deadline passes while the request is
         still waiting, it is rejected instead of admitted (its TTFT budget
@@ -514,12 +531,16 @@ class ServingEngine:
         counterpart: a request whose average token pace, measured from its
         first token, exceeds the budget is shed mid-flight (its slot and
         pages go to requests that can still meet their SLO).  ``type_id``
-        only labels the request's workload type on telemetry events."""
+        only labels the request's workload type on telemetry events.
+        ``priority`` (higher = more important) orders admission — the queue
+        is stable-sorted by priority whenever any waiter is non-zero — and
+        marks preemption victims for the cluster rebalancer."""
         prompt = np.asarray(prompt, np.int32)
         self._validate(len(prompt), max_new_tokens, rid)
         req = EngineRequest(rid, prompt, max_new_tokens,
                             deadline=ttft_deadline,
-                            tpot_budget=tpot_deadline)
+                            tpot_budget=tpot_deadline,
+                            priority=priority)
         tm = self.telemetry
         if tm.enabled:
             req.t_submit = self.clock()
@@ -572,35 +593,70 @@ class ServingEngine:
         snaps: list[InflightSnapshot] = []
         for slot in sorted(self.active):
             r = self.active.pop(slot)
-            if release or r.prefilling:
-                # mid-chunk prefixes are not resumable state: drop the pages
-                self.cache.release_slot(slot)
-                snaps.append(InflightSnapshot(r.rid, r.prompt,
-                                              list(r.generated),
-                                              r.max_new_tokens,
-                                              deadline=r.deadline,
-                                              tpot=r.tpot_budget))
-                continue
-            ssm_row = (self.cache.ssm[:, slot]
-                       if self.cache.ssm is not None else None)
-            conv_row = (self.cache.conv[:, slot]
-                        if self.cache.conv is not None else None)
-            n_shared = self.cache.seq_shared.get(slot, 0)
-            blocks, seq_len = self.cache.disown_slot(slot)
-            snaps.append(InflightSnapshot(
-                r.rid, r.prompt, list(r.generated), r.max_new_tokens,
-                blocks=blocks, seq_len=seq_len, n_shared=n_shared,
-                pool=self.cache.pool,
-                ssm=ssm_row, conv=conv_row, deadline=r.deadline,
-                tpot=r.tpot_budget))
+            snaps.append(self._snapshot_slot(slot, r, release))
         for r in self.waiting:
             snaps.append(InflightSnapshot(r.rid, r.prompt,
                                           list(r.generated),
                                           r.max_new_tokens,
                                           deadline=r.deadline,
-                                          tpot=r.tpot_budget))
+                                          tpot=r.tpot_budget,
+                                          priority=r.priority))
         self.waiting = []
         return snaps
+
+    def _snapshot_slot(self, slot: int, r: EngineRequest,
+                       release: bool) -> InflightSnapshot:
+        """Snapshot one evicted active request (slot already popped).
+
+        ``release=True`` or mid-prefill: token state only, pages back to
+        the pool.  Otherwise a page-handoff snapshot that owns the slot's
+        disowned pages and SSM rows (caller must adopt or release them).
+        """
+        if release or r.prefilling:
+            # mid-chunk prefixes are not resumable state: drop the pages
+            self.cache.release_slot(slot)
+            return InflightSnapshot(r.rid, r.prompt, list(r.generated),
+                                    r.max_new_tokens,
+                                    deadline=r.deadline,
+                                    tpot=r.tpot_budget,
+                                    priority=r.priority)
+        ssm_row = (self.cache.ssm[:, slot]
+                   if self.cache.ssm is not None else None)
+        conv_row = (self.cache.conv[:, slot]
+                    if self.cache.conv is not None else None)
+        n_shared = self.cache.seq_shared.get(slot, 0)
+        blocks, seq_len = self.cache.disown_slot(slot)
+        return InflightSnapshot(
+            r.rid, r.prompt, list(r.generated), r.max_new_tokens,
+            blocks=blocks, seq_len=seq_len, n_shared=n_shared,
+            pool=self.cache.pool,
+            ssm=ssm_row, conv=conv_row, deadline=r.deadline,
+            tpot=r.tpot_budget, priority=r.priority)
+
+    def export_request(self, rid: int,
+                       release: bool = False) -> InflightSnapshot | None:
+        """Evict ONE request mid-span without touching admission.
+
+        The cluster rebalancer's single-sequence primitive: an active
+        request comes out as a page-handoff snapshot (unless ``release`` or
+        still prefilling — then token-state only, pages freed), a queued
+        one as a plain token snapshot.  Returns None if ``rid`` is not
+        here.  Unlike ``export_inflight`` this leaves every other request
+        and the admission gate untouched, so the engine keeps serving.
+        """
+        for slot, r in list(self.active.items()):
+            if r.rid == rid:
+                del self.active[slot]
+                return self._snapshot_slot(slot, r, release)
+        for i, r in enumerate(self.waiting):
+            if r.rid == rid:
+                self.waiting.pop(i)
+                return InflightSnapshot(r.rid, r.prompt, list(r.generated),
+                                        r.max_new_tokens,
+                                        deadline=r.deadline,
+                                        tpot=r.tpot_budget,
+                                        priority=r.priority)
+        return None
 
     def import_by_pages(self, snaps: list[InflightSnapshot]
                         ) -> list[InflightSnapshot]:
@@ -677,7 +733,7 @@ class ServingEngine:
             r = EngineRequest(s.rid, np.asarray(s.prompt, np.int32),
                               s.max_new_tokens, slot=slot,
                               generated=list(s.generated),
-                              tpot_budget=s.tpot)
+                              tpot_budget=s.tpot, priority=s.priority)
             r.prefill_pos = len(r.prefill_tokens)   # prefix already in pages
             # the pace clock restarts on the adopting engine: migration
             # stall is accounted to the switch, not to this request's TPOT
@@ -702,7 +758,7 @@ class ServingEngine:
             if not s.generated:          # never prefilled: plain submission
                 self.submit(s.rid, s.prompt, s.max_new_tokens,
                             ttft_deadline=s.deadline,
-                            tpot_deadline=s.tpot)
+                            tpot_deadline=s.tpot, priority=s.priority)
                 continue
             remaining = s.max_new_tokens - len(s.generated)
             if remaining < 1:
@@ -713,7 +769,7 @@ class ServingEngine:
             self.waiting.append(EngineRequest(
                 s.rid, np.asarray(s.prompt, np.int32), s.max_new_tokens,
                 generated=list(s.generated), ctx=ctx,
-                tpot_budget=s.tpot))
+                tpot_budget=s.tpot, priority=s.priority))
 
     def release_all(self) -> None:
         """Teardown: hand every block back to the (shared) pool."""
@@ -747,7 +803,23 @@ class ServingEngine:
             "shed": len(self.shed_rids),
             "decode_syncs": self.decode_syncs,
             "load": (len(self.waiting) + len(self.active)) / self.max_seqs,
+            "rebalanced_in": self.rebalanced_in,
+            "rebalanced_out": self.rebalanced_out,
+            "preempted": self.preempted,
+            "fragmentation": self._fragmentation(),
         }
+
+    def _fragmentation(self) -> float:
+        """Internal waste of the pages this replica's sequences hold:
+        1 - resident tokens / (held pages * block_size).  High values mean
+        many partially-filled tail pages — cheap sequences for the
+        rebalancer to relocate, since moving them frees whole pages."""
+        held = sum(len(b) for b in self.cache.seq_blocks.values())
+        if not held:
+            return 0.0
+        resident = sum(int(self.cache.seq_lens[s])
+                       for s in self.cache.seq_blocks)
+        return 1.0 - resident / (held * self.cache.block_size)
 
     def inflight_context_lens(self) -> list[int]:
         """Context length of every sequence that holds live KV pages (the
@@ -789,6 +861,10 @@ class ServingEngine:
         if self.fault_hook is not None:
             self.fault_hook("admit")
         self._shed_blown()
+        # priority-aware ordering: stable sort keeps FIFO within a class;
+        # the all-default (priority 0) path is left untouched
+        if any(r.priority for r in self.waiting):
+            self.waiting.sort(key=lambda r: -r.priority)
         free = self._free_slots()
         while self.waiting and free:
             req = self.waiting[0]

@@ -18,7 +18,19 @@ A ``FaultPlan`` is a list of ``FaultSpec``s consulted by
     ``BlockPool`` survives the engine and pages are handed off.
   * ``stall`` — the replica silently skips ``steps`` consecutive ticks
     starting at ``spec.tick`` (a straggler / frozen device; no error is
-    raised, progress just halts and the health feedback loop sees it).
+    raised, progress just halts).  With the cluster's rebalancer enabled
+    the step-loop watchdog detects the sustained zero progress, drains
+    the replica's requests onto survivors, and escalates to
+    ``fail_replica`` — a hang becomes graceful degradation; without it
+    only the health feedback loop sees the stall.
+  * ``slow`` — slow degradation rather than a freeze: for ``steps``
+    ticks the replica only makes progress every ``period``-th tick
+    (skipping the rest).  Exercises the watchdog's *low*-progress
+    detection and the health EWMA without ever fully halting.
+  * ``hotspot`` — traffic-skew injection: for ``steps`` ticks every new
+    submission routes to ``spec.replica`` (bypassing the router) while
+    the replica is up, deterministically building the queue-depth /
+    KV-pressure hot spot the rebalancer's load-relief path drains.
   * ``transient`` — the next ``steps`` dispatch attempts at or after
     ``spec.tick`` raise ``TransientDispatchError``; the cluster retries
     with exponential backoff and only declares the replica dead when the
@@ -44,7 +56,7 @@ from typing import Sequence
 
 import numpy as np
 
-FAULT_KINDS = ("crash", "stall", "transient", "oom",
+FAULT_KINDS = ("crash", "stall", "slow", "transient", "oom", "hotspot",
                "switch_build", "switch_migrate")
 
 
@@ -74,14 +86,17 @@ class FaultSpec:
 
     ``tick`` is the cluster tick the fault arms (for ``switch_*`` kinds it
     is the 1-based ``apply_plan`` ordinal instead).  ``steps`` is the
-    stall length / the number of transient or OOM firings.  ``replica``
-    indexes ``ClusterRuntime.replicas``.
+    stall/slow/hotspot length / the number of transient or OOM firings.
+    ``replica`` indexes ``ClusterRuntime.replicas``.  ``period`` applies
+    to ``slow`` only: the replica progresses on one of every ``period``
+    ticks inside the window.
     """
     kind: str
     tick: int
     replica: int = 0
     steps: int = 1
     lose_pages: bool = False
+    period: int = 2
 
     def __post_init__(self):
         if self.kind not in FAULT_KINDS:
@@ -102,7 +117,8 @@ class FaultPlan:
     @classmethod
     def seeded(cls, seed: int, *, n_replicas: int, horizon_ticks: int = 48,
                crashes: int = 1, stalls: int = 1, transients: int = 0,
-               ooms: int = 0, lose_pages: bool = False,
+               ooms: int = 0, slows: int = 0, hotspots: int = 0,
+               lose_pages: bool = False,
                switch_failure: str | None = None,
                switch_ordinal: int = 2) -> "FaultPlan":
         """Derive a reproducible mixed fault plan from an integer seed.
@@ -123,6 +139,14 @@ class FaultPlan:
         specs += draw("stall", stalls, steps=int(rng.randint(2, 7)))
         specs += draw("transient", transients, steps=int(rng.randint(1, 3)))
         specs += draw("oom", ooms, steps=int(rng.randint(1, 3)))
+        # new kinds draw AFTER the legacy ones so adding them to a plan
+        # shape never shifts the legacy specs of an existing seed
+        if slows:
+            specs += draw("slow", slows, steps=int(rng.randint(4, 10)),
+                          period=int(rng.randint(2, 4)))
+        if hotspots:
+            specs += draw("hotspot", hotspots,
+                          steps=int(rng.randint(4, 10)))
         if switch_failure is not None:
             specs.append(FaultSpec(switch_failure, switch_ordinal))
         return cls(specs)
@@ -143,10 +167,28 @@ class FaultPlan:
         return None
 
     def stalled(self, tick: int, replica: int) -> bool:
-        """Is this replica frozen at this tick (no error, no progress)?"""
-        return any(f.kind == "stall" and f.replica == replica
-                   and f.tick <= tick < f.tick + f.steps
-                   for f in self.faults)
+        """Is this replica frozen at this tick (no error, no progress)?
+
+        Covers both ``stall`` (every tick in the window) and ``slow``
+        (every tick in the window except each ``period``-th one, where
+        the degraded replica still limps forward)."""
+        for f in self.faults:
+            if f.replica != replica or not f.tick <= tick < f.tick + f.steps:
+                continue
+            if f.kind == "stall":
+                return True
+            if f.kind == "slow" and (tick - f.tick) % f.period:
+                return True
+        return False
+
+    def route_bias(self, tick: int) -> int | None:
+        """Replica index a ``hotspot`` injection concentrates all new
+        submissions on at this tick (None = no active hotspot)."""
+        for f in self.faults:
+            if (f.kind == "hotspot"
+                    and f.tick <= tick < f.tick + f.steps):
+                return f.replica
+        return None
 
     def admit_fault(self, tick: int, replica: int) -> FaultSpec | None:
         """OOM to raise from the engine's admission path at this tick."""

@@ -32,6 +32,14 @@ All three paths are token-for-token identical to an uninterrupted run under
 greedy decoding; they differ only in stall and bytes moved — measured in
 ``benchmarks/bench_switch.py`` and costed analytically by
 ``core.switching.plan_kv_migration``.
+
+The same ladder is a *steady-state* scheduling action, not just a switch /
+crash-recovery mechanism: the cluster's live rebalancer (see the policy
+section in ``serving.cluster``) calls ``migrate_batch`` with single-request
+snapshots from ``ServingEngine.export_request`` every tick it moves work —
+straggler drains, hot-spot relief, and priority preemption all ride the
+identical handoff > copy > re-prefill cost ordering, so a mid-span move is
+exactly as cheap as a switch-time one.
 """
 from __future__ import annotations
 

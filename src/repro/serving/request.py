@@ -27,6 +27,11 @@ class Request:
     # the goodput / SLO-attainment metrics count only requests within both.
     ttft_budget: float = float("inf")
     tpot_budget: float = float("inf")
+    # scheduling priority (higher = more important; 0 = best-effort).
+    # Plumbed through ``submit`` on engine and cluster: priority orders
+    # admission, and the cluster rebalancer preempts (relocates/evicts)
+    # lower-priority sequences before a higher-priority request sheds.
+    priority: int = 0
     # bookkeeping (simulator)
     replica: int = -1
     start: float = -1.0
@@ -72,6 +77,17 @@ def apply_slo_budgets(requests: list["Request"],
         r.ttft_budget = ttft_base + ttft_per_token * r.in_len
         r.tpot_budget = (tpot_interactive if r.out_len <= interactive_out
                          else tpot_batch)
+    return requests
+
+
+def assign_priorities(requests: list["Request"], high_frac: float = 0.25,
+                      high: int = 1, seed: int = 0) -> list["Request"]:
+    """Mark a seeded fraction of requests high-priority (the priority-mix
+    trace used by the rebalance benchmarks/tests).  Returns the same list
+    for chaining."""
+    rng = np.random.RandomState(seed)
+    for r in requests:
+        r.priority = high if rng.rand() < high_frac else 0
     return requests
 
 

@@ -35,6 +35,11 @@ retire                  tokens                       [terminal]
 shed                    reason ("ttft"|"tpot"|"capacity")  [terminal]
 finish_log              tokens                       [terminal; cluster-side]
 migrate                 src, dst, path, pages
+rebalance               src, dst, path, pages        [mid-span move; same
+                                                      flow-arrow render as
+                                                      migrate]
+preempt                 action ("relocate"|"evict"), for_rid
+degraded                ticks (zero-progress count)  [replica-level]
 evict                   pages, bytes                 [host tier, replica=-1]
 restore                 pages, bytes
 crash                   step, kind (fault kind)      [replica-level]
@@ -427,7 +432,7 @@ def export_chrome_trace(telemetry: Telemetry, path: str | None = None
             ev("i", f"{k} {e.rid}", e.ts,
                e.replica if e.replica >= 0 else ORCH_TID, s="t",
                args=dict(e.data, rid=e.rid))
-        elif k == "migrate":
+        elif k in ("migrate", "rebalance"):
             src = int(e.data.get("src", e.replica))
             dst = int(e.data.get("dst", e.replica))
             closed = close_res(e.rid, e.ts)
@@ -435,11 +440,20 @@ def export_chrome_trace(telemetry: Telemetry, path: str | None = None
                 src = closed[0]
             fid = f"mig-{e.rid}-{flow_id}"
             flow_id += 1
-            ev("s", f"migrate {e.rid}", e.ts, src, id=fid,
+            ev("s", f"{k} {e.rid}", e.ts, src, id=fid,
                args=dict(e.data, rid=e.rid))
-            ev("f", f"migrate {e.rid}", e.ts, dst, id=fid, bp="e",
+            ev("f", f"{k} {e.rid}", e.ts, dst, id=fid, bp="e",
                args=dict(e.data, rid=e.rid))
             open_res[e.rid] = (dst, e.ts)
+        elif k == "preempt":
+            # eviction sends the victim back to the host log: its residency
+            # on the source replica ends here (a later rebalance/admit
+            # re-opens it); relocation leaves the close to the rebalance
+            # flow arrow that follows
+            if e.data.get("action") == "evict":
+                close_res(e.rid, e.ts)
+            ev("i", f"preempt {e.rid}", e.ts, e.replica, s="t",
+               args=dict(e.data, rid=e.rid))
         elif k == "crash":
             # the replica died: its open dispatch window and resident
             # requests end here (recovery re-opens them via migrate)

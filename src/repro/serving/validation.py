@@ -54,7 +54,8 @@ class RealSpanOutcome:
 def run_real_spans(model: str = "opt-30b", chips: int = 6, n_spans: int = 2,
                    requests_per_span: int = 6, seed: int = 0,
                    shard: bool = False, prefix_cache: bool = True,
-                   shared_prefix_len: int = 16, telemetry=None
+                   shared_prefix_len: int = 16, telemetry=None,
+                   rebalance: bool = False
                    ) -> tuple[list[RealSpanOutcome], "object"]:
     """Drive ``n_spans`` orchestrator plans through a real ClusterRuntime.
 
@@ -72,6 +73,11 @@ def run_real_spans(model: str = "opt-30b", chips: int = 6, n_spans: int = 2,
     at the runtime's block size), so the prefix cache has something to hit
     and the per-type hit-rate loop into ``plan_span`` is exercised end to
     end.  0 restores fully random prompts.
+
+    ``rebalance=True`` turns on the runtime's live rebalancer (watchdog
+    straggler drains, hot-spot relief, priority preemption — see the policy
+    section in ``serving.cluster``); the per-span move counters land on
+    ``SpanReport.rebalanced`` / ``SpanReport.preempted``.
 
     ``shard=True`` executes each replica's (tp, pp) on a real per-replica
     device sub-mesh (needs >= ``chips`` jax devices, e.g. under
@@ -97,7 +103,8 @@ def run_real_spans(model: str = "opt-30b", chips: int = 6, n_spans: int = 2,
     runtime = ClusterRuntime(cfg, params, orch, blocks_per_chip=16,
                              seqs_per_chip=1, block_size=8, drain_steps=2,
                              seed=seed, shard=shard,
-                             prefix_cache=prefix_cache, telemetry=telemetry)
+                             prefix_cache=prefix_cache, telemetry=telemetry,
+                             rebalance=rebalance)
     rng = np.random.RandomState(seed)
     # one fixed template per type, drawn from a separate stream so toggling
     # the mode doesn't perturb the per-request draws below

@@ -19,11 +19,13 @@ from repro.core.orchestrator import Orchestrator, OrchestratorConfig
 from repro.core.types import (ClusterSpec, Deployment, H100_SPEC,
                               ReplicaConfig, WorkloadType)
 from repro.models import init_params
-from repro.serving.cluster import ClusterHangError, ClusterRuntime
+from repro.serving.cluster import (ClusterHangError, ClusterRuntime,
+                                   RebalanceConfig)
 from repro.serving.engine import ServingEngine
 from repro.serving.faults import (FaultPlan, FaultSpec, InjectedOOM,
                                   ReplicaCrash, TransientDispatchError)
 from repro.serving.router import FlowRouter
+from repro.serving.telemetry import TERMINAL_KINDS, Telemetry
 
 pytestmark = pytest.mark.chaos
 
@@ -181,6 +183,8 @@ MATRIX = {
                           switch_failure="switch_build"),
     "stall": dict(crashes=0, stalls=1),
     "oom": dict(crashes=0, stalls=0, ooms=1),
+    "slow": dict(crashes=0, stalls=0, slows=1),
+    "hotspot": dict(crashes=0, stalls=0, hotspots=1),
 }
 
 
@@ -455,6 +459,209 @@ def test_tpot_budget_survives_migration(cfg_params):
                for h in rt.replicas
                for r in (list(h.engine.active.values()) + h.engine.waiting)]
     assert carried == [123.0]
+
+
+# ---------------------------------------------------------------------------
+# Live rebalancing (ISSUE 9): watchdog straggler escape, hot-spot relief,
+# priority preemption, and the rebalance-on-vs-off shed acceptance bar.
+# ---------------------------------------------------------------------------
+
+
+def _one_terminal_per_rid(tm, rids):
+    """Every submitted rid got exactly one terminal telemetry event."""
+    terminals: dict[int, int] = {}
+    for e in tm.tracer.events:
+        if e.kind in TERMINAL_KINDS:
+            terminals[e.rid] = terminals.get(e.rid, 0) + 1
+    assert terminals.keys() == set(rids), "requests without a terminal event"
+    assert all(c == 1 for c in terminals.values()), \
+        f"duplicated terminal events: {terminals}"
+
+
+def test_priority_admission_order(cfg_params):
+    cfg, params = cfg_params
+    eng = ServingEngine(cfg, params, num_blocks=32, block_size=8, max_seqs=1)
+    eng.submit(0, np.arange(6, dtype=np.int32), 4)
+    eng.submit(1, np.arange(6, dtype=np.int32), 4, priority=1)
+    eng.step()
+    assert [r.rid for r in eng.active.values()] == [1], \
+        "the high-priority request must claim the slot first"
+    done = eng.run_to_completion()
+    assert {r.rid for r in done} == {0, 1}
+
+
+def test_watchdog_drains_and_escapes_permanent_stall(cfg_params, reference):
+    """A frozen replica used to be survivable only as a health signal; the
+    watchdog now drains it (free same-pool handoffs) and escalates it to a
+    real failure, so run_until_idle terminates with zero requests shed."""
+    cfg, params = cfg_params
+    faults = FaultPlan([FaultSpec("stall", 2, replica=0, steps=10_000)])
+    rt = _two_replica_runtime(cfg, params, faults,
+                              rebalance=RebalanceConfig(max_moves_per_tick=4))
+    for rid, (p, n) in enumerate(_jobs(cfg)):
+        rt.submit(rid, p, n)
+    rt.run_until_idle()
+    rep = rt.finish_span()
+    assert rep.rebalanced >= 1, "the stalled replica was never drained"
+    assert rep.rebalance.recompute_tokens == 0, \
+        "same-pool watchdog drains must not recompute any tokens"
+    assert rep.dead_replicas == [0], "a sustained stall must escalate"
+    assert not rt.all_shed_rids
+    _assert_all_complete_with_parity(rt, reference)
+
+
+def test_hotspot_relief_spreads_load(cfg_params, reference):
+    cfg, params = cfg_params
+    faults = FaultPlan([FaultSpec("hotspot", 0, replica=1, steps=4)])
+    rt = _two_replica_runtime(cfg, params, faults, rebalance=True)
+    for rid, (p, n) in enumerate(_jobs(cfg)):
+        rt.submit(rid, p, n)          # all biased onto replica 1
+    rt.run_until_idle()
+    rep = rt.finish_span()
+    assert rep.rebalanced >= 1, "the hot spot was never relieved"
+    stats = rt.load_stats()
+    assert stats[0]["rebalanced_in"] >= 1, \
+        "the cold replica should have received load"
+    assert stats[1]["rebalanced_out"] >= 1
+    assert not rt.all_shed_rids
+    _assert_all_complete_with_parity(rt, reference)
+
+
+def _straggler_runtime(cfg, params, faults, **kw):
+    """Two wide replicas (8 slots each) so the whole job set fits on one —
+    the shape the straggler acceptance run needs."""
+    rt = ClusterRuntime(cfg, params, total_chips=4, blocks_per_chip=32,
+                        seqs_per_chip=8, block_size=8, drain_steps=1,
+                        router=FlowRouter([[0.5], [0.5]]), faults=faults,
+                        **kw)
+    rt.apply_plan(_Plan([ReplicaConfig(1, 1), ReplicaConfig(1, 1)],
+                        [[0.5], [0.5]]))
+    return rt
+
+
+def _rebalance_acceptance_run(cfg, params, on):
+    """Seeded straggler + hot-spot + priority-mix trace on a virtual clock:
+    every request lands on replica 0, which freezes for 6 ticks — long
+    enough to blow the per-token pace budget of anything left in place."""
+    faults = FaultPlan([FaultSpec("hotspot", 0, replica=0, steps=2),
+                        FaultSpec("stall", 2, replica=0, steps=6)])
+    rt = _straggler_runtime(
+        cfg, params, faults,
+        rebalance=RebalanceConfig(max_moves_per_tick=4) if on else None)
+    now = [0.0]
+    for h in rt.replicas:
+        h.engine.clock = lambda: now[0]
+    for rid, (p, n) in enumerate(_jobs(cfg)):
+        rt.submit(rid, p, n, tpot_deadline=3.0,
+                  priority=1 if rid % 4 == 0 else 0)
+    ticks = 0
+    while rt.pending and ticks < 80:
+        rt.step()
+        now[0] += 1.0
+        ticks += 1
+    assert rt.pending == 0, "acceptance trace did not drain"
+    return rt, rt.finish_span()
+
+
+def test_rebalance_acceptance_fewer_shed_than_off(cfg_params, reference):
+    """The ISSUE 9 bar: same seeded straggler + hot-spot + priority mix,
+    rebalancing on vs off; on must shed strictly less, every completed
+    request keeps greedy parity, and mid-span drains ride the free
+    handoff path (zero tokens recomputed)."""
+    cfg, params = cfg_params
+    rt_off, rep_off = _rebalance_acceptance_run(cfg, params, on=False)
+    rt_on, rep_on = _rebalance_acceptance_run(cfg, params, on=True)
+    assert rep_off.shed >= 1, \
+        "the straggler mix must shed without rebalancing (bar is vacuous)"
+    assert rep_on.shed < rep_off.shed, \
+        "rebalancing-on must shed strictly fewer requests"
+    assert rep_on.rebalanced >= 1
+    assert rep_on.rebalance.handoff >= 1, \
+        "draining residents must ride the same-pool handoff path"
+    assert rep_on.rebalance.recompute_tokens == 0, \
+        "escape from the straggler must not recompute any tokens"
+    _assert_all_complete_with_parity(rt_off, reference)
+    _assert_all_complete_with_parity(rt_on, reference)
+
+
+def test_rebalance_destination_crash_recovers(cfg_params):
+    """Requests drained off a straggler land on a destination that then
+    crashes: recovery must move them again (shared prefix pages decref'd,
+    never double-freed), with one terminal telemetry event per rid."""
+    cfg, params = cfg_params
+    faults = FaultPlan([FaultSpec("hotspot", 0, replica=0, steps=2),
+                        FaultSpec("stall", 2, replica=0, steps=10_000),
+                        FaultSpec("crash", 7, replica=1)])
+    tm = Telemetry()
+    third = [[1.0 / 3], [1.0 / 3], [1.0 / 3]]
+    rt = ClusterRuntime(cfg, params, total_chips=6, blocks_per_chip=32,
+                        seqs_per_chip=4, block_size=8, drain_steps=1,
+                        router=FlowRouter(third), faults=faults,
+                        telemetry=tm, prefix_cache=True,
+                        rebalance=RebalanceConfig(max_moves_per_tick=4))
+    rt.apply_plan(_Plan([ReplicaConfig(1, 1)] * 3, third))
+    jobs = _shared_prefix_jobs(cfg)
+    for rid, (p, n) in enumerate(jobs):
+        rt.submit(rid, p, n)
+    rt.run_until_idle()
+    rep = rt.finish_span()
+    assert rep.rebalanced >= 1, "the straggler was never drained"
+    assert 1 in rep.dead_replicas, "the destination crash did not register"
+    _one_terminal_per_rid(tm, range(len(jobs)))
+    # completed requests match a fault-free cache-off reference: no tokens
+    # lost and no shared page corrupted across the double move
+    ref = ServingEngine(cfg, params, num_blocks=256, block_size=8,
+                        max_seqs=8)
+    for rid, (p, n) in enumerate(jobs):
+        ref.submit(rid, p, n)
+    expected = {r.rid: list(r.generated) for r in ref.run_to_completion()}
+    shed = set(rt.all_shed_rids)
+    for rid in range(len(jobs)):
+        if rid not in shed:
+            assert rt.results[rid].generated == expected[rid], \
+                f"rid {rid} diverged across rebalance + crash recovery"
+    # allocator books balance: nothing double-freed, nothing leaked
+    pool = rt.pool
+    held = sum(1 for r in pool.allocator.refs if r > 0)
+    assert held + pool.allocator.n_free == pool.num_blocks
+
+
+def test_preempt_evict_source_dies_before_resume(cfg_params):
+    """A preemption-evicted request is parked in the host log; its source
+    replica then dies before the re-prefill.  The log (not the replica) is
+    the restore source, so the victim must still complete with parity."""
+    cfg, params = cfg_params
+    tm = Telemetry()
+    rt = _two_replica_runtime(cfg, params, None, telemetry=tm,
+                              rebalance=True)
+    jobs = _jobs(cfg, n=10)
+    for rid, (p, n) in enumerate(jobs):
+        rt.submit(rid, p, n)
+    for _ in range(3):
+        rt.step()                     # both replicas saturated (4 slots)
+    hi_prompt = np.arange(8, dtype=np.int32)
+    jobs.append((hi_prompt, 6))
+    rt.submit(10, hi_prompt, 6, priority=2)
+    rt.step()                         # preemption ladder: relocate impossible
+    assert rt._evicted, "no victim was evicted for the high-pri waiter"
+    victim, src = next(iter(rt._evicted.items()))
+    rt.fail_replica(src)              # source dies before the resume
+    rt.run_until_idle()
+    rep = rt.finish_span()
+    assert rep.preempted >= 1
+    assert not rt.all_shed_rids, "eviction must not become shedding here"
+    assert victim in rt.results, "the evicted victim never resumed"
+    _one_terminal_per_rid(tm, range(11))
+    evs = [e for e in tm.tracer.events if e.kind == "preempt"]
+    assert any(e.data["action"] == "evict" for e in evs)
+    ref = ServingEngine(cfg, params, num_blocks=256, block_size=8,
+                        max_seqs=11)
+    for rid, (p, n) in enumerate(jobs):
+        ref.submit(rid, p, n)
+    expected = {r.rid: list(r.generated) for r in ref.run_to_completion()}
+    for rid in range(11):
+        assert rt.results[rid].generated == expected[rid], \
+            f"rid {rid} diverged through evict + source death + resume"
 
 
 # ---------------------------------------------------------------------------

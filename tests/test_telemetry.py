@@ -341,3 +341,82 @@ def test_trace_complete_under_chaos(cfg_params, case, kw):
         assert n_crash >= 1
     counts = validate_chrome_trace(export_chrome_trace(tm))
     assert counts["events"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Live rebalancing (ISSUE 9): rebalance events render as flow arrows, the
+# trace still validates, and a preempted-then-resumed request keeps the
+# one-terminal-per-rid invariant.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.chaos
+def test_rebalance_trace_flows_valid(cfg_params, tmp_path):
+    from repro.serving.cluster import RebalanceConfig
+    from repro.serving.faults import FaultSpec
+
+    faults = FaultPlan([FaultSpec("stall", 2, replica=0, steps=10_000)])
+    tm = Telemetry()
+    rt = ClusterRuntime(cfg_params[0], cfg_params[1], total_chips=4,
+                        blocks_per_chip=32, seqs_per_chip=4, block_size=8,
+                        drain_steps=1, router=FlowRouter([[0.5], [0.5]]),
+                        faults=faults, telemetry=tm,
+                        rebalance=RebalanceConfig(max_moves_per_tick=4))
+    rt.apply_plan(_Plan([ReplicaConfig(1, 1), ReplicaConfig(1, 1)],
+                        [[0.5], [0.5]]))
+    rng = np.random.RandomState(7)
+    for rid in range(8):
+        prompt = rng.randint(0, cfg_params[0].vocab_size,
+                             6 + (rid % 3) * 2).astype(np.int32)
+        rt.submit(rid, prompt, 6 + (rid % 4))
+    rt.run_until_idle()
+    rt.finish_span()
+
+    kinds = {e.kind for e in tm.tracer.events}
+    assert "rebalance" in kinds, "watchdog drains must emit rebalance events"
+    assert "degraded" in kinds, "the watchdog must announce degradation"
+    for e in tm.tracer.events:
+        if e.kind == "rebalance":
+            assert 0 <= e.data["src"] < 2 and 0 <= e.data["dst"] < 2
+            assert e.data["path"] in ("handoff", "copy", "reprefill",
+                                      "requeue")
+    out = tmp_path / "trace.json"
+    export_chrome_trace(tm, path=str(out))
+    counts = validate_chrome_trace(json.loads(out.read_text()))
+    assert counts["flows"] >= 1, "rebalances must draw flow arrows"
+
+
+def test_preempt_evict_resume_one_terminal(cfg_params):
+    """Eviction closes the victim's residency but is NOT terminal: the
+    resumed request retires exactly once, and the preempt event carries
+    the action and the waiter it made room for."""
+    cfg, params = cfg_params
+    tm = Telemetry()
+    rt = ClusterRuntime(cfg, params, total_chips=4, blocks_per_chip=32,
+                        seqs_per_chip=4, block_size=8, drain_steps=1,
+                        router=FlowRouter([[0.5], [0.5]]), telemetry=tm,
+                        rebalance=True)
+    rt.apply_plan(_Plan([ReplicaConfig(1, 1), ReplicaConfig(1, 1)],
+                        [[0.5], [0.5]]))
+    rng = np.random.RandomState(3)
+    for rid in range(10):
+        prompt = rng.randint(0, cfg.vocab_size, 8).astype(np.int32)
+        rt.submit(rid, prompt, 8)
+    for _ in range(3):
+        rt.step()                    # both replicas saturated
+    rt.submit(10, np.arange(8, dtype=np.int32), 6, priority=2)
+    rt.step()
+    rt.run_until_idle()
+    rt.finish_span()
+
+    evs = [e for e in tm.tracer.events if e.kind == "preempt"]
+    assert evs, "saturated replicas must preempt for the high-pri waiter"
+    assert all(e.data["action"] in ("relocate", "evict") for e in evs)
+    assert all(e.data["for_rid"] == 10 for e in evs)
+    terminals: dict[int, int] = {}
+    for e in tm.tracer.events:
+        if e.kind in TERMINAL_KINDS:
+            terminals[e.rid] = terminals.get(e.rid, 0) + 1
+    assert terminals.keys() == set(range(11))
+    assert all(c == 1 for c in terminals.values()), \
+        f"preempted-then-resumed requests duplicated terminals: {terminals}"
