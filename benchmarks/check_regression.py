@@ -3,8 +3,8 @@
 CI used to fail benchmarks only when they raised; this script turns the
 numbers themselves into a gate.  The workflow stashes the committed
 ``BENCH_engine.json`` / ``BENCH_switch.json`` / ``BENCH_recovery.json`` /
-``BENCH_prefix.json`` / ``BENCH_rebalance.json`` before the bench steps
-overwrite them, then runs::
+``BENCH_prefix.json`` / ``BENCH_rebalance.json`` / ``BENCH_disagg.json``
+before the bench steps overwrite them, then runs::
 
     python benchmarks/check_regression.py \
         --baseline-dir .bench-baseline --fresh-dir .
@@ -40,6 +40,7 @@ SWITCH_JSON = "BENCH_switch.json"
 RECOVERY_JSON = "BENCH_recovery.json"
 PREFIX_JSON = "BENCH_prefix.json"
 REBALANCE_JSON = "BENCH_rebalance.json"
+DISAGG_JSON = "BENCH_disagg.json"
 
 # machine-independent ratio floors (hard gates)
 PAGED_VS_DENSE_MIN = 10.0       # committed: ~80-250x on CPU smoke
@@ -281,6 +282,51 @@ def check_rebalance(base: dict, fresh: dict) -> list[str]:
     return bad
 
 
+def check_disagg(base: dict, fresh: dict) -> list[str]:
+    """The disagg bench also runs on a virtual clock: handoff counts and
+    the zero-recompute invariant must match the committed baseline
+    exactly, and the disagg-vs-mixed TTFT ordering holds within the fresh
+    run alone."""
+    bad: list[str] = []
+    b_rows = _index(base["results"], "mode")
+    f_rows = _index(fresh["results"], "mode")
+    for key, br in sorted(b_rows.items()):
+        fr = f_rows.get(key)
+        if fr is None:
+            bad.append(f"disagg {key[0]}: mode missing from fresh run")
+            continue
+        print(f"disagg/{key[0]}: ttft_p95 {fr['ttft_p95_ticks']:.2f} ticks "
+              f"(baseline {br['ttft_p95_ticks']:.2f}), "
+              f"handoffs {fr['handoffs']} (baseline {br['handoffs']})")
+        for field in ("completed", "shed", "handoffs", "handoff_path",
+                      "recompute_tokens", "prefill_tokens",
+                      "prompt_tokens"):
+            if fr.get(field) != br.get(field):
+                bad.append(f"disagg {key[0]}: {field} = {fr.get(field)} "
+                           f"(baseline {br.get(field)}) — virtual-time "
+                           f"trace is deterministic, handoff path changed")
+        for field in ("ttft_p95_ticks", "tpot_p95_ticks"):
+            fv, bv = fr.get(field, 0.0), br.get(field, 0.0)
+            if abs(fv - bv) > 0.05 * max(abs(bv), 1e-9):
+                bad.append(f"disagg {key[0]}: {field} = {fv:.3f} "
+                           f"(baseline {bv:.3f})")
+    mixed, disagg = f_rows.get(("mixed",)), f_rows.get(("disagg",))
+    if mixed and disagg:
+        print(f"disagg/gain: ttft_p95 {mixed['ttft_p95_ticks']:.2f} -> "
+              f"{disagg['ttft_p95_ticks']:.2f} ticks")
+        if not disagg["ttft_p95_ticks"] < mixed["ttft_p95_ticks"]:
+            bad.append(f"disagg: TTFT p95 {disagg['ttft_p95_ticks']:.2f} "
+                       f">= mixed {mixed['ttft_p95_ticks']:.2f} ticks — "
+                       f"disaggregation stopped paying for itself")
+        if disagg["recompute_tokens"] != 0:
+            bad.append(f"disagg: handoffs recomputed "
+                       f"{disagg['recompute_tokens']} prefill tokens "
+                       f"(must be 0)")
+        if disagg["handoffs"] < 1:
+            bad.append("disagg: no context rode the handoff path")
+    return bad
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline-dir", required=True, type=pathlib.Path,
@@ -309,6 +355,8 @@ def main(argv=None) -> int:
                         args.tolerance, args.stall_tolerance)
     bad += check_rebalance(_load(args.baseline_dir, REBALANCE_JSON),
                            _load(args.fresh_dir, REBALANCE_JSON))
+    bad += check_disagg(_load(args.baseline_dir, DISAGG_JSON),
+                        _load(args.fresh_dir, DISAGG_JSON))
     if bad:
         print("\nBENCH REGRESSIONS:", file=sys.stderr)
         for b in bad:

@@ -1,0 +1,30 @@
+"""CI check: every intra-repo markdown link in README.md / docs/ resolves.
+
+External (http/mailto) links are skipped; ``#anchor`` fragments are
+stripped; relative targets resolve against the linking file's directory.
+Exits non-zero listing every broken link.
+"""
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+LINK = re.compile(r"\[[^\]]+\]\(([^)\s]+)\)")
+
+
+def main() -> int:
+    bad = []
+    for md in [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]:
+        for target in LINK.findall(md.read_text()):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            path = target.split("#", 1)[0]
+            if path and not (md.parent / path).exists():
+                bad.append(f"{md.relative_to(ROOT)}: broken link -> {target}")
+    print("\n".join(bad) if bad else
+          "docs link check: all intra-repo links resolve")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

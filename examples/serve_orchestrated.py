@@ -89,7 +89,8 @@ def run_real(args) -> None:
     outcomes, runtime = run_real_spans(
         model=args.model, chips=args.chips, n_spans=args.spans,
         requests_per_span=args.requests_per_span, seed=args.seed,
-        shard=args.shard, telemetry=telemetry, rebalance=args.rebalance)
+        shard=args.shard, telemetry=telemetry, rebalance=args.rebalance,
+        disagg=args.disagg)
     mode = "sharded engines" if args.shard else "real engines"
     print(f"{runtime.cfg.name} ({mode}) planning as {args.model} on "
           f"{args.chips} chips")
@@ -111,6 +112,12 @@ def run_real(args) -> None:
               f"completed {report.completed}/{o.n_requests} | "
               f"health {np.round(report.achieved_fraction, 2)} | "
               f"observed-rate EWMA {np.round(o.observed_rates, 1)}")
+        if args.disagg and report.handoffs:
+            ho = report.handoff
+            print(f"  disagg: {report.handoffs} prefill->decode handoffs "
+                  f"(page-handoff {ho.handoff}, copied {ho.copied}, "
+                  f"recompute {ho.recompute_tokens} tokens) | "
+                  f"role util {report.role_util}")
         if args.rebalance:
             rb = report.rebalance
             print(f"  rebalance: moved {report.rebalanced} "
@@ -171,6 +178,10 @@ def main(argv=None):
                     help="with --real: enable the live rebalancer (watchdog "
                          "straggler drains, hot-spot relief, priority "
                          "preemption) and print per-span move counters")
+    ap.add_argument("--disagg", action="store_true",
+                    help="with --real: let the planner split replicas into "
+                         "prefill/decode roles; first-token-ready contexts "
+                         "hand off to decode replicas (zero recompute)")
     ap.add_argument("--requests-per-span", type=int, default=6)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--trace", metavar="OUT.json", default=None,

@@ -256,6 +256,14 @@ class CostModel:
         per_seq = max(self.p.seq_mem_bytes(w.total_len), 1.0)
         return max(0, min(self.max_batch, int(budget / per_seq)))
 
+    def kv_hop_seconds(self, w: WorkloadType) -> float:
+        """The prefill→decode handoff hop of a disaggregated pair: the
+        prompt's KV pages cross the interconnect once.  (With a shared
+        pool the runtime moves zero bytes — this prices the general
+        cross-pool case, and acts as a mild tax that keeps the planner
+        from disaggregating when the phases don't warrant it.)"""
+        return self.p.kv_bytes_per_token * w.in_len / self.hw.ici_bw
+
     @lru_cache(maxsize=100_000)
     def replica_perf(self, cfg: ReplicaConfig, w: WorkloadType) -> ReplicaPerf:
         b_eff = self.max_concurrency(cfg, w)
@@ -273,6 +281,19 @@ class CostModel:
         # with m in-flight microbatch groups, efficiency = m / (m + pp - 1).
         m = 4
         pp_eff = m / (m + cfg.pp - 1)
+        # Disaggregated roles price their single phase: a prefill replica's
+        # request costs one prefill forward plus the KV handoff hop (its
+        # slot frees at first token); a decode replica's costs only the
+        # decode stream.  (``cfg`` is frozen and hashable, so the role is
+        # part of the lru_cache key automatically.)
+        if cfg.role == "prefill":
+            time_per_req = prefill_t + self.kv_hop_seconds(w)
+            return ReplicaPerf(prefill_t, 0.0, b_eff,
+                               1.0 / time_per_req, True)
+        if cfg.role == "decode":
+            time_per_req = w.out_len * decode_t / (b_eff * pp_eff)
+            return ReplicaPerf(0.0, decode_t, b_eff,
+                               1.0 / time_per_req, True)
         # Continuous batching: a request occupies one decode slot for out_len
         # steps, plus its prefill is chunked into the decode stream
         # (Sarathi-style), costing prefill_t of replica time.
@@ -309,7 +330,31 @@ def profile_capacities(
     replicas: list[ReplicaConfig],
     workloads: list[WorkloadType],
 ) -> tuple[list[list[float]], list[list[float]]]:
-    """(n[k][j], e[k][j]) for the flow network."""
+    """(n[k][j], e[k][j]) for the flow network.
+
+    Disaggregated roles couple here: the flow network routes *admissions*,
+    and in a disaggregated pair only the prefill replica admits — the
+    decode replica receives contexts by handoff, outside the flow.  So a
+    ``decode`` replica contributes zero admission capacity, and each
+    ``prefill`` replica's capacity for type j is clipped by the decode
+    side's ability to absorb its first-token-ready contexts:
+    ``min(1, decode_cap_j / prefill_cap_j)`` — admitting prompts faster
+    than the decode pool drains them just moves the queue downstream.
+    ``mixed`` replicas are untouched.
+    """
     n = [[cm.capacity(r, w) for w in workloads] for r in replicas]
     e = [[cm.edge_capacity(r, w) for w in workloads] for r in replicas]
+    pre = [k for k, r in enumerate(replicas) if r.role == "prefill"]
+    dec = [k for k, r in enumerate(replicas) if r.role == "decode"]
+    if pre or dec:
+        for j in range(len(workloads)):
+            p_j = sum(n[k][j] for k in pre)
+            d_j = sum(n[k][j] for k in dec)
+            scale = min(1.0, d_j / p_j) if p_j > 0 else 0.0
+            for k in pre:
+                n[k][j] *= scale
+                e[k][j] *= scale
+        for k in dec:
+            for j in range(len(workloads)):
+                n[k][j] = e[k][j] = 0.0
     return n, e

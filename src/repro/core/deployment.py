@@ -54,7 +54,7 @@ class _Evaluator:
 
     @staticmethod
     def _key(dep: Deployment):
-        return tuple(sorted((r.tp, r.pp) for r in dep.replicas))
+        return tuple(sorted((r.tp, r.pp, r.role) for r in dep.replicas))
 
     def __call__(self, dep: Deployment) -> AssignmentResult:
         key = self._key(dep)
@@ -148,7 +148,7 @@ def enumerate_deployments(
 def _dedup(deps: list[Deployment]) -> list[Deployment]:
     seen, out = set(), []
     for d in deps:
-        key = tuple(sorted((r.tp, r.pp) for r in d.replicas))
+        key = tuple(sorted((r.tp, r.pp, r.role) for r in d.replicas))
         if key not in seen:
             seen.add(key)
             out.append(d)
@@ -361,3 +361,43 @@ def flow_guided_search(
             if stale >= patience:
                 break
     return SearchResult(dep, best, ev.evaluations, iters)
+
+
+def role_split_search(
+    cm: CostModel,
+    dep: Deployment,
+    workloads: list[WorkloadType],
+    ev: _Evaluator | None = None,
+) -> Deployment:
+    """Pick the best prefill:decode role split for a fixed deployment shape.
+
+    Disaggregation is a *role* axis on top of the chip/strategy search:
+    for each split size the ``n_pre`` largest-TP replicas take the
+    ``prefill`` role (prefill is compute-bound; TP divides its latency)
+    and the rest take ``decode`` (bandwidth-bound, batch-hungry), scored
+    by the same evaluator the deployment search uses — coupled admission
+    capacity via ``profile_capacities``, then latency residence on ties.
+    Because throughput quantizes into 2% buckets, a demand-limited span
+    (both shapes serve all arrivals) is decided by the residence terms,
+    where prefill-only replicas shine on long-prompt-heavy mixes — the
+    planner disaggregates exactly when there is capacity headroom to
+    spend on latency.  Returns the all-mixed baseline when no split wins.
+    """
+    if dep.dp < 2:
+        return dep
+    if ev is None:
+        ev = _Evaluator(cm, workloads)
+    mixed = Deployment(tuple(r.with_role("mixed") for r in dep.replicas))
+    best, best_sc = mixed, ev.score(mixed)
+    order = sorted(range(dep.dp),
+                   key=lambda k: (-dep.replicas[k].tp,
+                                  -dep.replicas[k].chips))
+    for n_pre in range(1, dep.dp):
+        pre = set(order[:n_pre])
+        cand = Deployment(tuple(
+            r.with_role("prefill" if k in pre else "decode")
+            for k, r in enumerate(mixed.replicas)))
+        sc = ev.score(cand)
+        if sc > best_sc:
+            best, best_sc = cand, sc
+    return best

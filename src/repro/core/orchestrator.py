@@ -40,7 +40,7 @@ import numpy as np
 
 from repro.core.assignment import assign_workloads
 from repro.core.costmodel import CostModel
-from repro.core.deployment import flow_guided_search
+from repro.core.deployment import flow_guided_search, role_split_search
 from repro.core.switching import (PlacedDeployment, place_deployment,
                                   plan_kv_migration, plan_switch)
 from repro.core.types import ClusterSpec, Deployment, WorkloadType
@@ -60,6 +60,10 @@ class OrchestratorConfig:
     # (capped at +0.25), so a cluster the rebalancer is actively reshaping
     # demands a bigger predicted win before the planner reshapes it again
     rebalance_churn_gain: float = 0.02
+    # consider disaggregated prefill/decode role splits on top of the
+    # chip/strategy search (``deployment.role_split_search``); the
+    # all-mixed deployment remains the baseline every split must beat
+    disaggregate: bool = False
 
 
 @dataclasses.dataclass
@@ -201,6 +205,14 @@ class Orchestrator:
             patience=self.cfg.search_patience, seed=self.cfg.search_seed,
             initial=self.current)
         new_dep, result = search.deployment, search.assignment
+        if self.cfg.disaggregate and new_dep.dp >= 2:
+            # role axis on top of the shape search: split the chosen
+            # deployment into prefill/decode specialists when the
+            # evaluator scores a split above the all-mixed baseline
+            rd = role_split_search(self.cm, new_dep, workloads)
+            if rd.replicas != new_dep.replicas:
+                new_dep = rd
+                result = assign_workloads(self.cm, new_dep, workloads)
         scale = None
         if (self.health is not None and self.current is not None
                 and len(self.health) == self.current.dp):

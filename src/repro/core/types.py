@@ -46,24 +46,45 @@ class WorkloadType:
             self, cached_frac=min(max(float(cached_frac), 0.0), 1.0))
 
 
+# Serving roles for disaggregated prefill/decode deployments: a "mixed"
+# replica runs both phases (the default, and the only pre-disaggregation
+# behavior); a "prefill" replica admits new requests and hands the finished
+# context to a "decode" replica at first-token readiness; a "decode"
+# replica never admits new requests — it only adopts handed-off contexts
+# and runs the fused decode loop.
+REPLICA_ROLES = ("mixed", "prefill", "decode")
+
+
 @dataclasses.dataclass(frozen=True)
 class ReplicaConfig:
-    """Parallelism strategy for one model replica.
+    """Parallelism strategy (and serving role) for one model replica.
 
     tp * pp == chips.  `tp` may be non-power-of-two (the paper uses TP=3).
+    ``role`` defaults to "mixed"; see ``REPLICA_ROLES`` and
+    ``docs/architecture.md`` for the disaggregated prefill/decode split.
     """
 
     tp: int
     pp: int = 1
+    role: str = "mixed"
+
+    def __post_init__(self):
+        if self.role not in REPLICA_ROLES:
+            raise ValueError(f"unknown replica role {self.role!r} "
+                             f"(expected one of {REPLICA_ROLES})")
 
     @property
     def chips(self) -> int:
         return self.tp * self.pp
 
+    def with_role(self, role: str) -> "ReplicaConfig":
+        return dataclasses.replace(self, role=role)
+
     def __str__(self) -> str:  # matches the paper's "(TP=3, PP=2)" notation
+        tag = "" if self.role == "mixed" else f", {self.role}"
         if self.pp == 1:
-            return f"(TP={self.tp})"
-        return f"(TP={self.tp}, PP={self.pp})"
+            return f"(TP={self.tp}{tag})"
+        return f"(TP={self.tp}, PP={self.pp}{tag})"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -85,7 +106,7 @@ class Deployment:
 
     def canonical(self) -> "Deployment":
         """Order-independent form (replicas sorted) for dedup during search."""
-        key = lambda r: (-r.chips, -r.tp, -r.pp)
+        key = lambda r: (-r.chips, -r.tp, -r.pp, r.role)
         return Deployment(tuple(sorted(self.replicas, key=key)))
 
 

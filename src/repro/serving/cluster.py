@@ -1,5 +1,10 @@
 """ClusterRuntime: execute orchestrator span plans on real serving engines.
 
+``docs/architecture.md`` is the narrative guide — the request lifecycle
+end to end, the migration ladder and who reuses it, and the failure
+model; ``docs/telemetry.md`` explains how to read an exported trace.
+This docstring keeps the runtime-policy reference detail.
+
 This is the bridge between the analytical OServe stack (``core.orchestrator``
 search + switch planning) and real JAX compute (``serving.engine``): a
 ``SpanPlan``'s heterogeneous deployment is materialized as N live
@@ -64,28 +69,37 @@ scatter): bytes move, but still zero tokens recomputed.
 
 Failure model
 -------------
-The same machinery that reshapes deployments on purpose absorbs
-*unplanned* change (``serving.faults`` provides the deterministic chaos
-source for CI).  What is **detected**: a dispatch or sync error from a
-replica's engine — ``ReplicaCrash`` and any sync-phase error kill the
-replica outright; transient dispatch errors and admission ``MemoryError``s
-get retried with exponential backoff and escalate to death only after
-``max_retries`` consecutive failures; stalls raise nothing and are caught
-by the health feedback loop instead (low achieved/expected throughput →
-shrunken capacity next span).  What is **recovered**: a dead replica's
-in-flight and queued requests move to survivors through the cheapest
-migration path available — same-pool page handoff when the shared
-``BlockPool`` outlives the engine, cross-pool copy/reshard when sharded,
-and re-prefill from the cluster's host-side **request log** (prompt +
-every emitted token, updated at each sync) when the replica's device
-state cannot be trusted (``lose_pages`` crashes, or any failure after
-dispatch but before sync, when host and device lengths disagree).  Either
-way zero emitted tokens are lost and greedy token parity with a
-fault-free run is preserved.  What is **shed**: requests no survivor can
-hold (context ceiling / no live replica) are released and recorded in
-``shed_rids`` — the cluster degrades, it never wedges.  Dead replicas'
-chips leave the planning budget via ``Orchestrator.observe_failures`` so
-the next ``plan_span`` re-solves over survivors.
+See the "Failure model" section of ``docs/architecture.md`` for the
+narrative (detect / recover / shed, and why zero emitted tokens are
+ever lost).  Implementation anchors: ``ReplicaCrash`` and sync-phase
+errors kill a replica outright; transient dispatch errors and admission
+``MemoryError``s retry with exponential backoff and escalate after
+``max_retries``; stalls are caught by the health loop and the
+rebalancer's watchdog.  Recovery rides the migration ladder, falling
+back to re-prefill from the host-side **request log** (prompt + every
+emitted token, updated at each sync) when device state is untrusted
+(``lose_pages`` crashes, or host/device length disagreement).
+Unplaceable requests land in ``shed_rids``; dead replicas' chips leave
+the planning budget via ``Orchestrator.observe_failures``.
+
+Disaggregated roles
+-------------------
+When a plan carries ``ReplicaConfig.role`` splits (``prefill`` /
+``decode``; see ``docs/architecture.md`` for the why), the runtime:
+routes new requests to ``prefill``/``mixed`` replicas and decode-phase
+work to ``decode``/``mixed`` ones (``_route`` / ``_pick_dst`` /
+``_resume_evicted`` all narrow by role but *relax* when no compatible
+replica is live — roles are a preference, not a law); sizes decode
+replicas for residency (bigger quota and ``max_seqs`` over the same
+shared pool — reservations still bound true usage); and every tick
+(``_handoff_post``) exports each prefill-role replica's
+first-token-ready requests *keeping their pages* and adopts them on a
+decode replica via the same-pool handoff — zero bytes, zero recompute.
+Handoffs are counted per span (``SpanReport.handoffs`` /
+``SpanReport.handoff``) and per engine (``handoff_in``/``handoff_out``
+in ``load_stats``); prefill-replica health is measured as
+progress-per-work-tick liveness, since token throughput would
+under-measure a replica whose sequences leave at first token.
 
 Rebalancing and preemption policy
 ---------------------------------
@@ -148,38 +162,22 @@ replica, and reverts the router and orchestrator state — the switch
 reports ``rolled_back=True`` instead of raising, and serving continues
 on the old deployment.
 
-Telemetry & how to read a trace
--------------------------------
+Telemetry
+---------
 Pass ``telemetry=`` (a ``serving.telemetry.Telemetry`` bundle) and the
 whole stack instruments itself: every engine is built with the bundle
 and its replica index as ``trace_id``, the orchestrator's ``audit``
-attribute is pointed at the bundle's ``DecisionAudit`` (so each
-``plan_span`` records workload mix / health / ``cached_frac`` EWMAs /
-hysteresis margin / predicted share, joined with the realized
-``SpanReport`` by ``finish_span``), and the cluster itself emits the
-events engines cannot see: ``migrate`` (per request, with src/dst
-replica and restore path), ``crash`` / ``recovered`` (with the recovery
-stall), terminal ``finish_log`` / ``shed`` for requests the cluster
-finishes or drops outside any engine, and ``switch_prepare`` /
-``switch_commit`` / ``switch_rollback`` begin/end pairs.  Stall
-histograms: ``switch_stall_s`` (wall time of a reconfiguring
-``apply_plan``) and ``recovery_stall_s`` (wall time of ``_fail``'s
-detect-export-restore trip).  See ``serving.telemetry`` for the full
-event schema.
-
-Export with ``telemetry.export_chrome_trace`` (or
-``examples/serve_orchestrated.py --real --trace out.json``) and load the
-JSON in Perfetto / chrome://tracing.  Reading it: one track per replica
-plus an ``orchestrator`` track.  A request's life on a replica is an
-``X`` slice named ``req <rid>`` (opened at admit, closed at
-retire/shed/migrate/crash); instants mark submit, first_token, shed and
-prefix hits; ``horizon`` slices are the engine's fused
-dispatch→sync windows (their args carry batch size and horizon).  A
-migration draws a flow arrow from the end of the request's slice on the
-source track to the start of its slice on the destination — a request
-that crashes, migrates twice, and finishes elsewhere reads as one chain
-of slices connected by arrows, ending in exactly one terminal instant.
-Switch phases nest as begin/end spans on the orchestrator track.
+attribute is pointed at the bundle's ``DecisionAudit`` (joined with the
+realized ``SpanReport`` by ``finish_span``), and the cluster emits the
+events engines cannot see: ``migrate`` / ``handoff`` (per request, with
+src/dst replica and restore path), ``crash`` / ``recovered`` (with the
+recovery stall), terminal ``finish_log`` / ``shed`` for requests the
+cluster finishes or drops outside any engine, and ``switch_prepare`` /
+``switch_commit`` / ``switch_rollback`` begin/end pairs, plus the
+``switch_stall_s`` / ``recovery_stall_s`` histograms.  The event schema
+lives in ``serving.telemetry``; how to read an exported trace —
+tracks, residency slices, flow arrows, the one-terminal-event
+invariant, a worked example — is ``docs/telemetry.md``.
 
 ``load_stats()`` returns one dict per replica: the engine's FROZEN
 ``LOAD_STATS_KEYS`` schema (see ``serving.engine``'s docstring table)
@@ -257,6 +255,12 @@ class ReplicaHandle:
     no_progress: int = 0
     degraded: bool = False
     degraded_tick: int = 0
+    # liveness accounting (reset each span): ticks the replica had work,
+    # and ticks it actually dispatched.  Token throughput under-measures a
+    # prefill-role replica (its sequences leave at first token), so its
+    # health is scored on progress/work instead of emitted/slot ticks.
+    work_ticks: int = 0
+    progress_ticks: int = 0
 
 
 @dataclasses.dataclass
@@ -309,6 +313,15 @@ class SpanReport:
     preempted: int = 0               # lower-priority victims preempted
     rebalance: MigrationReport = dataclasses.field(
         default_factory=MigrationReport)   # path split of the moves
+    # disaggregated prefill/decode accounting (zeros when every replica
+    # is role "mixed"): first-token-ready contexts handed from prefill to
+    # decode replicas, the migration-path split of those hops, and the
+    # mean achieved fraction of the span's live replicas per role — the
+    # decision audit's evidence for scoring the prefill:decode split
+    handoffs: int = 0
+    handoff: MigrationReport = dataclasses.field(
+        default_factory=MigrationReport)
+    role_util: dict = dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass
@@ -477,6 +490,9 @@ class ClusterRuntime:
         self._span_rebalanced = 0
         self._span_preempted = 0
         self._span_rebalance = MigrationReport()
+        # disaggregated prefill→decode handoff accounting for the span
+        self._span_handoffs = 0
+        self._span_handoff = MigrationReport()
 
     # -- replica materialization ----------------------------------------------
 
@@ -484,6 +500,15 @@ class ClusterRuntime:
         """chips -> (max_seqs, kv_quota, max_blocks_per_seq)."""
         quota = self.blocks_per_chip * rc.chips
         max_seqs = max(1, self.seqs_per_chip * rc.chips)
+        if rc.role == "decode":
+            # the KV-residency side of a disaggregated pair: a decode
+            # replica holds many concurrent contexts but never prefills,
+            # so it carries a bigger quota view and much higher
+            # concurrency.  With the shared pool this is safe
+            # oversubscription — reservations check the pool's real free
+            # blocks as well as the view quota.
+            quota *= 2
+            max_seqs *= 4
         cfg_cap = self.cfg.max_seq_len // self.block_size
         # a small replica also has a smaller per-sequence context ceiling:
         # one sequence may use at most its replica's whole block quota
@@ -500,7 +525,7 @@ class ClusterRuntime:
             prefill_chunk_tokens=self.prefill_chunk_tokens,
             decode_horizon=self.decode_horizon,
             prefix_cache=self.prefix_cache,
-            telemetry=self.telemetry, trace_id=index)
+            telemetry=self.telemetry, trace_id=index, role=rc.role)
         if not self.shard:
             return ServingEngine(self.cfg, self.params, pool=self.pool,
                                  kv_quota=quota, **common)
@@ -842,9 +867,10 @@ class ClusterRuntime:
     def _emit_migrations(self, rep: MigrationReport, dst: int,
                          src_idx: dict[int, int],
                          kind: str = "migrate") -> None:
-        """Telemetry: one ``migrate``/``rebalance`` event per restored
-        request (``kind`` distinguishes switch/crash migrations from
-        mid-span rebalancer moves; both render as flow arrows).
+        """Telemetry: one ``migrate``/``rebalance``/``handoff`` event per
+        restored request (``kind`` distinguishes switch/crash migrations
+        from mid-span rebalancer moves and disaggregated prefill→decode
+        hops; all render as flow arrows).
 
         ``src_idx`` maps rid -> source replica index; requests without an
         entry (e.g. a rollback return trip of a request that never left)
@@ -868,15 +894,28 @@ class ClusterRuntime:
 
     # -- request flow -----------------------------------------------------------
 
-    def _route(self, type_id: int, ctx_len: int, new_tokens: int) -> int:
+    def _route(self, type_id: int, ctx_len: int, new_tokens: int,
+               phase: str = "prefill") -> int:
         """Pick a live, admitting replica whose context ceiling fits the
         request; -1 when no replica can ever serve it (router state
-        untouched)."""
+        untouched).
+
+        ``phase`` applies the disaggregated-role gate: new (prefill-phase)
+        requests avoid ``decode`` replicas and decode-phase snapshots avoid
+        ``prefill`` replicas.  The gate is a preference, not a law — when
+        no role-compatible replica is up, the base mask wins, so a prefill
+        replica's death can still recover its in-flight requests onto
+        whatever survives (degrade, never wedge)."""
         up = np.array([not h.dead and h.engine.admitting
                        and h.engine.fits(ctx_len, new_tokens)
                        for h in self.replicas])
         if not up.any():
             return -1
+        avoid = "decode" if phase == "prefill" else "prefill"
+        preferred = up & np.array(
+            [h.rc.role != avoid for h in self.replicas])
+        if preferred.any():
+            up = preferred
         if self.faults is not None:
             # injected traffic skew: all submissions pile onto one replica
             # while it is up (the hot spot the rebalancer must relieve)
@@ -991,6 +1030,7 @@ class ClusterRuntime:
             had_work[h.index] = work
             if not work:
                 continue
+            h.work_ticks += 1
             if h.period > 1 and self._tick % h.period:
                 continue                  # injected straggler skips this tick
             if (self.faults is not None
@@ -1014,6 +1054,7 @@ class ClusterRuntime:
                 self._transient(h, e)
                 continue
             h.failures = 0
+            h.progress_ticks += 1
             dispatched.add(h.index)
             pending.append((h, eng.tokens_out, pend))
         if self.rebalance is not None:
@@ -1035,10 +1076,51 @@ class ClusterRuntime:
                 finished.append(r)
             h.emitted_span += h.engine.tokens_out - t0
             self._sync_log(h.engine)
+        self._handoff_post()
         if self.rebalance is not None:
             self._rebalance_post()
         self._drain_prefix_events()
         return finished
+
+    def _handoff_post(self) -> None:
+        """Disaggregated prefill→decode handoff, run post-sync each tick.
+
+        Every live ``prefill``-role replica hands its first-token-ready
+        sequences (prefill complete, >= 1 token emitted, output remaining)
+        to a ``decode`` replica — ``mixed`` as the fallback — through the
+        same export / ``migrate_batch`` machinery switches, recovery and
+        the rebalancer use.  With the shared pool this is a pure
+        page-ownership transfer (zero tokens recomputed, zero bytes
+        moved); sharded runtimes pay the cross-pool copy/reshard, still
+        zero recompute.  There is deliberately no per-tick budget: a
+        prefill replica's whole point is to clear its slots for the next
+        prompt, so throttling handoffs would just rebuild the admission
+        bottleneck the role split exists to remove.  A sequence with no
+        eligible destination keeps decoding in place until one appears."""
+        for h in self.replicas:
+            if h.dead or h.degraded or h.rc.role != "prefill":
+                continue
+            eng = h.engine
+            ready = [r for _, r in sorted(eng.active.items())
+                     if not r.prefilling and r.generated
+                     and r.max_new_tokens - len(r.generated) >= 1]
+            for r in ready:
+                dst = (self._pick_dst(h, r, roles=("decode",))
+                       or self._pick_dst(h, r, roles=("mixed",)))
+                if dst is None:
+                    continue
+                snap = eng.export_request(r.rid, release=False)
+                if snap is None:
+                    continue
+                self._log_tokens(snap.rid, snap.generated)
+                rep = migrate_batch(dst.engine, [snap])
+                self._emit_migrations(rep, dst.index,
+                                      {snap.rid: h.index}, kind="handoff")
+                self._span_handoff.merge(rep)
+                eng.handoff_out += 1
+                dst.engine.handoff_in += 1
+                self._span_handoffs += 1
+                self.rid_owner[snap.rid] = dst.index
 
     def _drain_prefix_events(self) -> None:
         """Fold every engine's per-admission cache events into the span's
@@ -1160,11 +1242,18 @@ class ClusterRuntime:
                 self._move_request(h, r)
 
     def _pick_dst(self, src_h: ReplicaHandle, r: EngineRequest,
-                  max_load: float | None = None) -> ReplicaHandle | None:
+                  max_load: float | None = None,
+                  roles: tuple | None = None) -> ReplicaHandle | None:
         """Least-loaded live survivor that can hold ``r`` *right now*:
         free slot + page/quota capacity for page-resident sequences
         (pre-checked so a handoff never degrades into a surprise
-        re-prefill), just the context-ceiling fit for queued ones."""
+        re-prefill), just the context-ceiling fit for queued ones.
+
+        ``roles`` restricts candidates to those replica roles (the
+        prefill→decode handoff asks for ``("decode",)`` first); when None,
+        the phase-compatibility gate applies — a decode-phase request
+        never lands on a ``prefill`` replica and a prefill-phase one never
+        lands on a ``decode`` replica."""
         eng = src_h.engine
         ctx = len(r.prompt) + len(r.generated)
         remaining = r.max_new_tokens - len(r.generated)
@@ -1176,9 +1265,16 @@ class ClusterRuntime:
         if resident:
             n_blocks = len(eng.cache.seq_blocks[r.slot])
             n_shared = eng.cache.seq_shared.get(r.slot, 0)
+        decode_phase = not r.prefilling and bool(r.generated)
         best, best_load = None, None
         for h in self.replicas:
             if h is src_h or h.dead or h.degraded:
+                continue
+            if roles is not None:
+                if h.rc.role not in roles:
+                    continue
+            elif ((h.rc.role == "decode" and not decode_phase)
+                  or (h.rc.role == "prefill" and decode_phase)):
                 continue
             e = h.engine
             if not e.admitting or not e.fits(ctx, remaining):
@@ -1347,16 +1443,25 @@ class ClusterRuntime:
                 continue
             best, best_load = None, None
             total = ctx + remaining - 1
-            for h in ever:
-                e = h.engine
-                if h.degraded or not e.admitting:
-                    continue
-                if (len(e.active) >= e.max_seqs
-                        or not e.cache.can_admit(ctx, total_tokens=total)):
-                    continue
-                load = e.load_stats()["load"]
-                if best_load is None or load < best_load:
-                    best, best_load = h, load
+            # role gate as a preference: a phase-incompatible replica is
+            # only used when no compatible one has room (degrade > park)
+            avoid = "prefill" if lg.emitted else "decode"
+            for relax in (False, True):
+                for h in ever:
+                    e = h.engine
+                    if h.degraded or not e.admitting:
+                        continue
+                    if not relax and h.rc.role == avoid:
+                        continue
+                    if (len(e.active) >= e.max_seqs
+                            or not e.cache.can_admit(ctx,
+                                                     total_tokens=total)):
+                        continue
+                    load = e.load_stats()["load"]
+                    if best_load is None or load < best_load:
+                        best, best_load = h, load
+                if best is not None:
+                    break
             if best is None:
                 continue             # no room yet: retry next tick
             snap = self._snapshot_from_log(rid)
@@ -1487,6 +1592,7 @@ class ClusterRuntime:
         h.degraded = False
         h.degraded_tick = 0
         h.slot_ticks = h.emitted_span = h.completed_span = 0
+        h.work_ticks = h.progress_ticks = 0
         h.shed_mark = 0
         self.lost_chips -= h.rc.chips
         self.repaired_replicas.append(k)
@@ -1538,7 +1644,8 @@ class ClusterRuntime:
                     self.telemetry.emit("finish_log", rid=s.rid,
                                         tokens=len(s.generated))
                 continue
-            k = self._route(self.rid_type.get(s.rid, 0), ctx, remaining)
+            k = self._route(self.rid_type.get(s.rid, 0), ctx, remaining,
+                            phase="decode" if s.generated else "prefill")
             if k < 0:
                 release_snapshot_pages(s)
                 self.shed_rids.append(s.rid)
@@ -1584,7 +1691,14 @@ class ClusterRuntime:
             if h.dead:
                 achieved.append(0.0)
                 continue
-            if h.slot_ticks == 0:
+            if h.rc.role == "prefill":
+                # token throughput under-measures a prefill replica (its
+                # sequences leave at first token); liveness — did it
+                # dispatch whenever it had work — is the honest signal,
+                # and still degrades a stalled/straggling one
+                base = (1.0 if h.work_ticks == 0
+                        else min(1.0, h.progress_ticks / h.work_ticks))
+            elif h.slot_ticks == 0:
                 base = 1.0               # idle replica: no evidence of harm
             else:
                 base = min(1.0, h.emitted_span / h.slot_ticks)
@@ -1624,7 +1738,16 @@ class ClusterRuntime:
                             prefix_restored_bytes=d_restore,
                             rebalanced=self._span_rebalanced,
                             preempted=self._span_preempted,
-                            rebalance=self._span_rebalance)
+                            rebalance=self._span_rebalance,
+                            handoffs=self._span_handoffs,
+                            handoff=self._span_handoff,
+                            role_util={
+                                role: float(np.mean(vals))
+                                for role in ("mixed", "prefill", "decode")
+                                if (vals := [a for h, a in
+                                             zip(self.replicas, achieved)
+                                             if not h.dead
+                                             and h.rc.role == role])})
         if self.telemetry.enabled:
             # join realized span numbers with the matching plan decision
             # (FIFO) so the audit can score prediction calibration
@@ -1652,6 +1775,8 @@ class ClusterRuntime:
             h.slot_ticks = 0
             h.emitted_span = 0
             h.completed_span = 0
+            h.work_ticks = 0
+            h.progress_ticks = 0
             h.shed_mark = len(h.engine.shed_rids)
         self._span_completed = 0
         self._span_type_counts = np.zeros(self.n_types)
@@ -1663,4 +1788,6 @@ class ClusterRuntime:
         self._span_rebalanced = 0
         self._span_preempted = 0
         self._span_rebalance = MigrationReport()
+        self._span_handoffs = 0
+        self._span_handoff = MigrationReport()
         return report

@@ -127,6 +127,9 @@ preempted                lower-priority sequences preempted here (relocated
                          or evicted) to admit a higher-priority request
 fragmentation            internal waste of allocated KV pages: 1 - resident
                          tokens / (held pages * block_size), in [0, 1]
+handoff_in               first-token-ready contexts a disaggregated
+                         prefill replica handed TO this replica mid-span
+handoff_out              contexts this (prefill-role) replica handed off
 =======================  ====================================================
 """
 from __future__ import annotations
@@ -158,6 +161,7 @@ LOAD_STATS_KEYS = frozenset({
     "prefix_evicted_bytes", "prefix_restored_bytes", "shed",
     "decode_syncs", "load",
     "rebalanced_in", "rebalanced_out", "preempted", "fragmentation",
+    "handoff_in", "handoff_out",
 })
 
 
@@ -277,7 +281,8 @@ class ServingEngine:
                  decode_horizon: int = 1,
                  prefix_cache: bool = False,
                  mesh=None, shard_plan=None,
-                 clock=None, telemetry=None, trace_id: int = 0):
+                 clock=None, telemetry=None, trace_id: int = 0,
+                 role: str = "mixed"):
         """``mesh`` + ``shard_plan`` turn on real intra-replica model
         parallelism: params are placed with ``param_pspecs`` shardings, the
         paged K/V pool is sharded along its KV-head (tp) and layer (pp)
@@ -377,6 +382,13 @@ class ServingEngine:
         self.rebalanced_in = 0
         self.rebalanced_out = 0
         self.preempted = 0
+        # disaggregated serving role ("mixed" | "prefill" | "decode") and
+        # its first-token-ready context traffic: the engine itself is
+        # role-oblivious (the cluster routes and hands off); the role tag
+        # and counters exist for telemetry and the health loop
+        self.role = role
+        self.handoff_in = 0
+        self.handoff_out = 0
         # one time source for deadlines, TPOT pacing, AND trace events:
         # ``clock`` wins, else the telemetry bundle's clock (time.monotonic
         # on the disabled default) — inject a fake via either for
@@ -807,6 +819,8 @@ class ServingEngine:
             "rebalanced_out": self.rebalanced_out,
             "preempted": self.preempted,
             "fragmentation": self._fragmentation(),
+            "handoff_in": self.handoff_in,
+            "handoff_out": self.handoff_out,
         }
 
     def _fragmentation(self) -> float:

@@ -6,6 +6,9 @@ that reshapes deployments on purpose (span switches) must also absorb
 dispatch errors, pool-reservation OOMs, and switches that die half-way.
 This module provides the reproducible fault source for exercising those
 paths — no real faults needed, so the whole recovery stack runs in CI.
+The failure model the injected faults drive is described in
+``docs/architecture.md``; ``docs/telemetry.md`` explains how crashes,
+recoveries and shed requests appear in an exported trace.
 
 A ``FaultPlan`` is a list of ``FaultSpec``s consulted by
 ``ClusterRuntime`` at well-defined injection sites:

@@ -1,5 +1,9 @@
 """Serving telemetry: request-lifecycle tracing, metrics, decision audit.
 
+``docs/telemetry.md`` is the narrative guide — how to read an exported
+trace end to end, with a worked example; this docstring is the event
+schema reference it links back to.
+
 Three cooperating pieces, bundled in :class:`Telemetry` and threaded
 through the serving stack (`engine.py`, `cluster.py`, `migration.py`,
 `prefixcache.py`, `core/orchestrator.py`):
@@ -38,6 +42,10 @@ migrate                 src, dst, path, pages
 rebalance               src, dst, path, pages        [mid-span move; same
                                                       flow-arrow render as
                                                       migrate]
+handoff                 src, dst, path, pages        [prefill→decode hop of
+                                                      a disaggregated
+                                                      deployment; same
+                                                      flow-arrow render]
 preempt                 action ("relocate"|"evict"), for_rid
 degraded                ticks (zero-progress count)  [replica-level]
 evict                   pages, bytes                 [host tier, replica=-1]
@@ -432,7 +440,7 @@ def export_chrome_trace(telemetry: Telemetry, path: str | None = None
             ev("i", f"{k} {e.rid}", e.ts,
                e.replica if e.replica >= 0 else ORCH_TID, s="t",
                args=dict(e.data, rid=e.rid))
-        elif k in ("migrate", "rebalance"):
+        elif k in ("migrate", "rebalance", "handoff"):
             src = int(e.data.get("src", e.replica))
             dst = int(e.data.get("dst", e.replica))
             closed = close_res(e.rid, e.ts)

@@ -55,7 +55,7 @@ def run_real_spans(model: str = "opt-30b", chips: int = 6, n_spans: int = 2,
                    requests_per_span: int = 6, seed: int = 0,
                    shard: bool = False, prefix_cache: bool = True,
                    shared_prefix_len: int = 16, telemetry=None,
-                   rebalance: bool = False
+                   rebalance: bool = False, disagg: bool = False
                    ) -> tuple[list[RealSpanOutcome], "object"]:
     """Drive ``n_spans`` orchestrator plans through a real ClusterRuntime.
 
@@ -79,6 +79,12 @@ def run_real_spans(model: str = "opt-30b", chips: int = 6, n_spans: int = 2,
     section in ``serving.cluster``); the per-span move counters land on
     ``SpanReport.rebalanced`` / ``SpanReport.preempted``.
 
+    ``disagg=True`` lets the planner consider disaggregated prefill/decode
+    role splits (``OrchestratorConfig.disaggregate``); when a span plan
+    carries roles, the runtime routes new requests to prefill replicas and
+    hands first-token-ready contexts to decode replicas
+    (``SpanReport.handoffs`` / ``SpanReport.role_util``).
+
     ``shard=True`` executes each replica's (tp, pp) on a real per-replica
     device sub-mesh (needs >= ``chips`` jax devices, e.g. under
     ``XLA_FLAGS=--xla_force_host_platform_device_count=8``); plans are
@@ -99,7 +105,8 @@ def run_real_spans(model: str = "opt-30b", chips: int = 6, n_spans: int = 2,
     params = init_params(cfg, jax.random.PRNGKey(seed), jnp.float32)
     cm = CostModel(get_config(model).profile(), hw=H100_SPEC)
     orch = Orchestrator(cm, ClusterSpec(chips, hw=H100_SPEC),
-                        OrchestratorConfig(search_patience=8))
+                        OrchestratorConfig(search_patience=8,
+                                           disaggregate=disagg))
     runtime = ClusterRuntime(cfg, params, orch, blocks_per_chip=16,
                              seqs_per_chip=1, block_size=8, drain_steps=2,
                              seed=seed, shard=shard,

@@ -1,0 +1,188 @@
+"""Disaggregated prefill/decode serving: role plumbing, the routing gate,
+the zero-recompute handoff, and chaos recovery across a prefill-replica
+death (ISSUE 10).
+
+The routing invariant under test: while a role-compatible replica is up,
+a prefill-phase request never lands on a ``decode`` replica and a
+decode-phase one never lands on a ``prefill`` replica — and the moment
+no compatible replica survives, the gate relaxes instead of wedging.
+Everything runs on the CPU smoke model; the chaos-marked test joins the
+CI chaos job.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.types import Deployment, ReplicaConfig
+from repro.models import init_params
+from repro.serving.cluster import ClusterRuntime
+from repro.serving.engine import ServingEngine
+from repro.serving.faults import FaultPlan, FaultSpec
+from repro.serving.router import FlowRouter
+
+
+@pytest.fixture(scope="module")
+def cfg_params():
+    cfg = get_smoke_config("yi-9b")
+    params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    return cfg, params
+
+
+class _Plan:
+    """Minimal stand-in for SpanPlan in manual (orchestrator-less) tests."""
+
+    def __init__(self, rcs, fractions):
+        self.deployment = Deployment(tuple(rcs))
+        self.fractions = fractions
+
+
+def _jobs(cfg, n=8, seed=7):
+    rng = np.random.RandomState(seed)
+    return [(rng.randint(0, cfg.vocab_size, 6 + (i % 3) * 2).astype(np.int32),
+             6 + (i % 4)) for i in range(n)]
+
+
+def _disagg_runtime(cfg, params, fractions=((0.5,), (0.5,)), faults=None,
+                    **kw):
+    """Replica 0 = prefill, replica 1 = decode, one shared pool."""
+    fr = [list(f) for f in fractions]
+    rt = ClusterRuntime(cfg, params, total_chips=4, blocks_per_chip=32,
+                        seqs_per_chip=2, block_size=8, drain_steps=1,
+                        router=FlowRouter(fr), faults=faults, **kw)
+    rt.apply_plan(_Plan([ReplicaConfig(2, role="prefill"),
+                         ReplicaConfig(2, role="decode")], fr))
+    return rt
+
+
+def _reference(cfg, params, jobs):
+    eng = ServingEngine(cfg, params, num_blocks=256, block_size=8,
+                        max_seqs=len(jobs))
+    for rid, (p, n) in enumerate(jobs):
+        eng.submit(rid, p, n)
+    return {r.rid: list(r.generated) for r in eng.run_to_completion()}
+
+
+# ---------------------------------------------------------------------------
+# Role plumbing.
+# ---------------------------------------------------------------------------
+
+
+def test_replica_config_role_validation():
+    assert ReplicaConfig(2).role == "mixed"
+    rc = ReplicaConfig(2).with_role("prefill")
+    assert rc.role == "prefill" and "prefill" in str(rc)
+    assert rc.with_role("mixed") == ReplicaConfig(2)
+    with pytest.raises(ValueError, match="role"):
+        ReplicaConfig(2, role="draft")
+
+
+# ---------------------------------------------------------------------------
+# The routing gate: phase vs role, with the router arguing the other way.
+# ---------------------------------------------------------------------------
+
+
+def test_route_never_admits_new_requests_on_decode_replica(cfg_params):
+    """Even with the plan's fractions pointing ALL traffic at the decode
+    replica, every submission must land on the prefill one: the role gate
+    narrows the router's mask before it argmaxes."""
+    cfg, params = cfg_params
+    rt = _disagg_runtime(cfg, params, fractions=((0.0,), (1.0,)))
+    for rid, (p, n) in enumerate(_jobs(cfg, n=4)):
+        assert rt.submit(rid, p, n) == 0, \
+            "a new (prefill-phase) request was routed to a decode replica"
+
+
+def test_route_decode_phase_avoids_prefill_replica(cfg_params):
+    """The other direction, at the ``_route`` level the snapshot restore
+    path uses: a decode-phase request must pick the decode replica even
+    when the fractions argue for the prefill one."""
+    cfg, params = cfg_params
+    rt = _disagg_runtime(cfg, params, fractions=((1.0,), (0.0,)))
+    assert rt._route(0, 16, 4, phase="decode") == 1
+    assert rt._route(0, 16, 4, phase="prefill") == 0
+
+
+def test_route_gate_relaxes_when_no_compatible_replica(cfg_params):
+    """Roles are a preference, not a law: with the decode replica dead, a
+    decode-phase request routes to the prefill survivor (and vice versa)
+    rather than shedding — degrade, never wedge."""
+    cfg, params = cfg_params
+    rt = _disagg_runtime(cfg, params)
+    rt.fail_replica(1)
+    assert rt._route(0, 16, 4, phase="decode") == 0
+    rt2 = _disagg_runtime(cfg, params)
+    rt2.fail_replica(0)
+    assert rt2._route(0, 16, 4, phase="prefill") == 1
+
+
+# ---------------------------------------------------------------------------
+# The handoff: every request moves exactly once, zero recompute, parity.
+# ---------------------------------------------------------------------------
+
+
+def test_handoff_zero_recompute_with_parity(cfg_params):
+    cfg, params = cfg_params
+    jobs = _jobs(cfg)
+    rt = _disagg_runtime(cfg, params)
+    for rid, (p, n) in enumerate(jobs):
+        rt.submit(rid, p, n)
+    rt.run_until_idle()
+    rep = rt.finish_span()
+    assert not rt.all_shed_rids
+    # every request: admitted on the prefill replica, handed off exactly
+    # once at first token, finished on the decode replica
+    assert rep.handoffs == len(jobs)
+    assert rep.handoff.handoff == len(jobs), \
+        "a same-pool handoff left the zero-byte page path"
+    assert rep.handoff.recompute_tokens == 0
+    assert rt.total_prefill_tokens == sum(len(p) for p, _ in jobs), \
+        "the decode replica recomputed prefill work"
+    stats = rt.load_stats()
+    assert stats[0]["handoff_out"] == len(jobs)
+    assert stats[1]["handoff_in"] == len(jobs)
+    assert set(rep.role_util) == {"prefill", "decode"}
+    expected = _reference(cfg, params, jobs)
+    for rid in range(len(jobs)):
+        assert rt.results[rid].generated == expected[rid], \
+            f"rid {rid} diverged across the prefill->decode handoff"
+
+
+# ---------------------------------------------------------------------------
+# Chaos: the prefill replica dies mid-handoff traffic.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.chaos
+def test_prefill_replica_death_recovers_onto_decode_survivor(cfg_params):
+    """Crash the prefill replica while requests are queued and mid-prefill
+    on it: recovery must relax the role gate and move everything onto the
+    decode survivor (handoff for first-token-ready residents, re-prefill /
+    requeue for the rest), completing all requests with greedy parity."""
+    cfg, params = cfg_params
+    jobs = _jobs(cfg)
+    # tick 1 admits + hands off the first wave and leaves the second wave
+    # queued on the prefill replica; the tick-2 crash therefore hits a
+    # replica that still owns queued work (handed-off residents are
+    # already safe on the decode replica)
+    faults = FaultPlan([FaultSpec("crash", 2, replica=0)])
+    rt = _disagg_runtime(cfg, params, faults=faults)
+    for rid, (p, n) in enumerate(jobs):
+        rt.submit(rid, p, n)
+    rt.run_until_idle()
+    rep = rt.finish_span()
+    assert rep.dead_replicas == [0], "the armed crash never fired"
+    assert rep.recovery.migrated + rep.recovery.requeued >= 1, \
+        "the prefill replica's requests were not recovered"
+    assert not rt.all_shed_rids, \
+        "recovery shed despite a live (decode-role) survivor"
+    expected = _reference(cfg, params, jobs)
+    for rid in range(len(jobs)):
+        assert rt.results[rid].generated == expected[rid], \
+            f"rid {rid} diverged through prefill-replica death recovery"
+    # new submissions keep working on the decode-role survivor
+    extra = np.arange(8, dtype=np.int32)
+    assert rt.submit(len(jobs), extra, 4) == 1
+    rt.run_until_idle()
+    assert len(jobs) in rt.results
